@@ -1,0 +1,48 @@
+"""Framework benchmark: reduced-config LM step timings per architecture
+(train + decode), plus kernel-vs-oracle interpret timings.
+
+derived = tokens/s on this host for the reduced config (CPU; correctness
+artifact — production numbers come from the §Roofline model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import model as M
+from repro.optim import adamw as A
+from repro.parallel.sharding import MeshRules
+from repro.training import steps as S
+
+RULES = MeshRules(mesh=None)
+
+
+def run():
+    B, SL = 2, 32
+    key = jax.random.PRNGKey(0)
+    for arch in ARCH_IDS:
+        cfg = reduced(get_config(arch))
+        params = M.init_params(cfg, key, dtype=jnp.float32)
+        opt = A.adamw_init(params)
+        if cfg.frontend == "embed":
+            batch = {"embeds": jax.random.normal(key, (B, SL, cfg.d_model),
+                                                 jnp.float32),
+                     "labels": jnp.zeros((B, SL), jnp.int32)}
+        else:
+            batch = {"tokens": jnp.ones((B, SL), jnp.int32),
+                     "labels": jnp.zeros((B, SL), jnp.int32)}
+        ts = jax.jit(S.build_train_step(cfg, RULES, remat=True, q_chunk=0))
+        t = time_call(ts, params, opt, batch, warmup=1, iters=3)
+        emit(f"lm/train_step_{arch}", t,
+             f"tok_per_s={B * SL / (t / 1e6):.0f}")
+
+        cache = M.init_cache(cfg, B, SL, dtype=jnp.float32)
+        dec_key = "embeds" if cfg.frontend == "embed" else "tokens"
+        dec = {dec_key: (batch[dec_key][:, :1]),
+               "pos": jnp.zeros((B,), jnp.int32)}
+        sv = jax.jit(S.build_serve_step(cfg, RULES))
+        t = time_call(sv, params, cache, dec, warmup=1, iters=3)
+        emit(f"lm/serve_step_{arch}", t,
+             f"tok_per_s={B / (t / 1e6):.0f}")

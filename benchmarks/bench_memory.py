@@ -1,0 +1,73 @@
+"""Paper Fig. 6 / 11 / 12 — memory-per-worker benchmarks.
+
+Per-device bytes from ``compiled.memory_analysis()`` for the two
+use-case steps at N in {3x, 6x} partitions, measured in an 8-device
+subprocess (devices are the workers; more partitions => smaller blocks,
+the paper's memory/partition trade-off).  derived = per-device bytes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from benchmarks.common import emit
+
+_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                            + os.environ.get("XLA_FLAGS", ""))
+import json
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.core.bundle import Bundle
+from repro.core.engine import make_step
+from repro.imaging import psf as psf_op
+from repro.imaging.condat import SolverConfig
+from repro.imaging.deconvolve import build_bundle as psf_bundle, \
+    make_step_fn as psf_step
+from repro.imaging.scdl import SCDLConfig, build_bundle as scdl_bundle, \
+    make_step_fn as scdl_step
+from repro.data.synthetic import coupled_patches
+
+out = {}
+mesh = make_mesh((8,), ("data",))
+
+data = psf_op.simulate(384, jax.random.PRNGKey(1))
+cfg = SolverConfig(mode="sparse", n_scales=3)
+bundle, _ = psf_bundle(data.Y, data.psfs, cfg, mesh=mesh,
+                       sigma_noise=data.sigma)
+step = make_step(psf_step(cfg), bundle, donate=False)
+c = step.lower(bundle.data, bundle.replicated).compile()
+ma = c.memory_analysis()
+out["psf_sparse"] = dict(args=ma.argument_size_in_bytes,
+                         temp=ma.temp_size_in_bytes)
+
+S_h, S_l = coupled_patches(4096, 289, 81, 128, seed=3)
+scfg = SCDLConfig(n_atoms=256)
+b2 = scdl_bundle(S_h, S_l, scfg, mesh=mesh)
+step2 = make_step(scdl_step(scfg), b2, donate=False)
+c2 = step2.lower(b2.data, b2.replicated).compile()
+ma2 = c2.memory_analysis()
+out["scdl_gs"] = dict(args=ma2.argument_size_in_bytes,
+                      temp=ma2.temp_size_in_bytes)
+print("JSON" + json.dumps(out))
+"""
+
+
+def run():
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = [l for l in proc.stdout.splitlines()
+               if l.startswith("JSON")][0][4:]
+    out = json.loads(payload)
+    for name, d in out.items():
+        emit(f"fig6_11_12/{name}_mem_per_worker", 0.0,
+             f"args_bytes={d['args']};temp_bytes={d['temp']}")

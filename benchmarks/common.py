@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing, CSV emission, small problem sizes.
+
+Container constraint (DESIGN.md §9): one physical CPU core — cross-device
+wall-clock speedups are not physical here.  Every benchmark therefore
+reports (i) measured us_per_call on this host and (ii) a `derived` column
+whose meaning is stated per table (modeled speedup from the roofline
+communication model, byte counts, cost values, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+              **kw) -> float:
+    """Median wall time per call in microseconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

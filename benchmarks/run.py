@@ -1,0 +1,49 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,lm]
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
+single-core measurement caveats; the derived column is defined per table).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="psf,scdl,memory,lm")
+    args = ap.parse_args()
+    wanted = set(args.only.split(","))
+
+    print("name,us_per_call,derived")
+    failures = []
+    if "psf" in wanted:
+        from benchmarks import bench_psf
+        _run(bench_psf.run, "psf", failures)
+    if "scdl" in wanted:
+        from benchmarks import bench_scdl
+        _run(bench_scdl.run, "scdl", failures)
+    if "memory" in wanted:
+        from benchmarks import bench_memory
+        _run(bench_memory.run, "memory", failures)
+    if "lm" in wanted:
+        from benchmarks import bench_lm
+        _run(bench_lm.run, "lm", failures)
+    if failures:
+        print(f"# FAILED tables: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+def _run(fn, tag, failures):
+    try:
+        fn()
+    except Exception:
+        traceback.print_exc()
+        failures.append(tag)
+
+
+if __name__ == "__main__":
+    main()

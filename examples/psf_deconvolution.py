@@ -1,0 +1,47 @@
+"""Use case (a): space-variant deconvolution of galaxy survey images.
+
+Simulates a Euclid-like stack (stamps + spatially varying anisotropic
+PSFs + noise), runs the distributed Algorithm 1 with both regularisers,
+and reports recovery quality + convergence — the paper's Figs. 4/7 in
+miniature.
+
+    PYTHONPATH=src python examples/psf_deconvolution.py [--n 512]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.imaging import psf as psf_op
+from repro.imaging.condat import SolverConfig
+from repro.imaging.deconvolve import deconvolve
+from repro.launch.mesh import smallest_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=60)
+    args = ap.parse_args()
+
+    data = psf_op.simulate(args.n, jax.random.PRNGKey(42))
+    mse = lambda a, b: float(jnp.mean((a - b) ** 2))
+    print(f"simulated {args.n} stamps; observation MSE vs truth: "
+          f"{mse(data.Y, data.X_true):.3e}")
+
+    mesh = smallest_mesh()
+    for mode in ("sparse", "lowrank"):
+        cfg = SolverConfig(mode=mode, n_scales=4, lam=0.05, rank=16)
+        X, log = deconvolve(data.Y, data.psfs, cfg, mesh=mesh,
+                            sigma_noise=data.sigma,
+                            max_iter=args.iters, tol=1e-5)
+        print(f"[{mode:7s}] cost {log.costs[0]:.3f} -> {log.costs[-1]:.3f} "
+              f"in {len(log.costs)} iters "
+              f"({log.total_seconds:.1f}s, "
+              f"converged_at={log.converged_at}); "
+              f"deconvolved MSE: {mse(jnp.asarray(X), data.X_true):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Quickstart: the paper's bundled distributed learning in ~40 lines.
+
+Builds a bundle of co-partitioned arrays, runs an iterative map/reduce
+learning loop (ridge regression via distributed gradient descent), and
+shows the three core pieces: Bundle.create / bundle_map / map-reduce via
+the IterativeDriver.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bundle import Bundle, gather
+from repro.core.driver import IterativeDriver
+from repro.launch.mesh import smallest_mesh
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n, d = 4096, 32
+    w_true = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    X = jax.random.normal(jax.random.fold_in(key, 2), (n, d))
+    y = X @ w_true + 0.01 * jax.random.normal(jax.random.fold_in(key, 3),
+                                              (n,))
+
+    # 1. bundle the co-partitioned dataset (the paper's RDD Bundle);
+    #    the model w rides in the replicated side (broadcast variable)
+    bundle = Bundle.create(
+        {"X": X, "y": y},
+        replicated={"w": jnp.zeros((d,)), "lr": jnp.float32(0.05)},
+        mesh=smallest_mesh())
+    print(f"bundle: {bundle.n_records} records, "
+          f"{bundle.n_partitions} partition(s)")
+
+    # 2. one learning iteration = map (local residuals/gradients)
+    #    + reduce (psum) — Algorithm-1-shaped
+    def step(data, rep, axes):
+        r = data["X"] @ rep["w"] - data["y"]
+        grad = data["X"].T @ r
+        cost = 0.5 * jnp.sum(r ** 2)
+        if axes:
+            grad = jax.lax.psum(grad, axes)
+            cost = jax.lax.psum(cost, axes)
+        new_w = rep["w"] - rep["lr"] * grad / data["X"].shape[0]
+        # broadcast state rides in the reduced output; data unchanged
+        return data, {"cost": cost, "w": new_w}
+
+    # 3. drive to convergence (checkpointing/straggler hooks omitted)
+    class RidgeDriver(IterativeDriver):
+        def run(self):
+            data, rep = self.bundle.data, dict(self.bundle.replicated)
+            for i in range(self.max_iter):
+                data, out = self.step(data, rep)
+                self.log.costs.append(float(out["cost"]))
+                rep["w"] = out["w"]
+                if self._converged():
+                    self.log.converged_at = i
+                    break
+            self.final_w = rep["w"]
+            return self.bundle.with_data(data, replicated=rep)
+
+    driver = RidgeDriver(step, bundle, max_iter=200, tol=1e-6)
+    driver.run()
+    err = float(jnp.linalg.norm(driver.final_w - w_true) /
+                jnp.linalg.norm(w_true))
+    print(f"converged at iter {driver.log.converged_at}; "
+          f"cost {driver.log.costs[0]:.1f} -> {driver.log.costs[-1]:.4f}; "
+          f"relative weight error {err:.2e}")
+    assert err < 0.05
+
+
+if __name__ == "__main__":
+    main()

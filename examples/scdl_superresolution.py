@@ -1,0 +1,67 @@
+"""Use case (b): super-resolution via sparse coupled dictionary training.
+
+Trains coupled HR/LR dictionaries with the distributed Algorithm 2, then
+super-resolves held-out LR patches: sparse-code them against X_l and
+reconstruct with X_h — the paper's remote-sensing pipeline end to end.
+
+    PYTHONPATH=src python examples/scdl_superresolution.py [--gs]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import coupled_patches
+from repro.imaging.scdl import SCDLConfig, train
+from repro.launch.mesh import smallest_mesh
+
+
+def sparse_code(S_l, X_l, lam=0.05, iters=100):
+    """ISTA on the LR dictionary (inference-time sparse coding)."""
+    L = float(jnp.linalg.norm(X_l, 2) ** 2) * 1.05
+    W = jnp.zeros((X_l.shape[1], S_l.shape[1]))
+
+    def body(W, _):
+        G = X_l.T @ (X_l @ W - S_l)
+        W = W - G / L
+        W = jnp.sign(W) * jnp.maximum(jnp.abs(W) - lam / L, 0)
+        return W, None
+
+    W, _ = jax.lax.scan(body, W, None, length=iters)
+    return W
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gs", action="store_true",
+                    help="grayscale shape (P=289,M=81) instead of HS")
+    ap.add_argument("--atoms", type=int, default=128)
+    ap.add_argument("--iters", type=int, default=40)
+    args = ap.parse_args()
+
+    p_dim, m_dim = (289, 81) if args.gs else (25, 9)
+    K = 8192
+    S_h, S_l = coupled_patches(K + 512, p_dim, m_dim, args.atoms, seed=1)
+    train_h, test_h = S_h[:, :K], S_h[:, K:]
+    train_l, test_l = S_l[:, :K], S_l[:, K:]
+
+    cfg = SCDLConfig(n_atoms=args.atoms, max_iter=args.iters)
+    Xh, Xl, log = train(train_h, train_l, cfg, mesh=smallest_mesh())
+    print(f"trained {'GS' if args.gs else 'HS'} dictionaries "
+          f"(A={args.atoms}): NRMSE {log.costs[0]:.3f} -> "
+          f"{log.costs[-1]:.3f} over {len(log.costs)} iters "
+          f"({log.total_seconds:.1f}s)")
+
+    # super-resolve: code LR patches, decode with the HR dictionary
+    W = sparse_code(test_l, jnp.asarray(Xl))
+    sr = jnp.asarray(Xh) @ W
+    base = jnp.sqrt(jnp.mean(test_h ** 2))
+    nrmse = float(jnp.sqrt(jnp.mean((sr - test_h) ** 2)) / base)
+    print(f"held-out super-resolution NRMSE: {nrmse:.3f} "
+          f"(vs {1.0:.1f} for zero prediction)")
+    assert nrmse < 0.9
+
+
+if __name__ == "__main__":
+    main()

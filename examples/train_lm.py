@@ -1,0 +1,57 @@
+"""End-to-end LM training driver (deliverable b): train a ~100M-param
+qwen3-family model for a few hundred steps on the synthetic token stream,
+with checkpointing and restart.
+
+On this CPU container the default is a width-reduced ~10M config so the
+run finishes in minutes; pass --dmodel 768 --layers 12 for the true ~100M
+class on real hardware (the code path is identical — config only).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import register
+from repro.launch.mesh import smallest_mesh
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--dmodel", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = get_config("qwen3-1.7b")
+    cfg = dataclasses.replace(
+        reduced(base, n_layers=args.layers, d_model=args.dmodel,
+                vocab=2048, d_ff=args.dmodel * 4,
+                n_heads=max(4, args.dmodel // 64)),
+        name="qwen3-example")
+    register(cfg)
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} "
+          f"~{cfg.param_count()/1e6:.1f}M params")
+
+    _, _, losses = train(
+        "qwen3-example", steps=args.steps, batch=args.batch, seq=args.seq,
+        use_reduced=False, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        lr=3e-3, mesh=smallest_mesh(), log_every=25)
+    tail = float(np.mean(losses[-10:]))
+    head = float(np.mean(losses[:10]))
+    print(f"loss: {head:.3f} -> {tail:.3f} "
+          f"(improved {head - tail:.3f} nats)")
+    # a few hundred steps drops well over 0.3 nats; scale the bar for
+    # shorter smoke runs
+    bar = 0.3 if args.steps >= 200 else 0.02
+    assert tail < head - bar, "model failed to learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, MoEConfig,  # noqa
+                                SSMConfig, ShapeConfig, all_configs,
+                                get_config, reduced, shape_applicable)

@@ -1,0 +1,20 @@
+"""deepseek-moe-16b — fine-grained MoE, shared experts [arXiv:2401.06066].
+
+Assigned spec: 28L d_model=2048 16H (GQA kv=16 == MHA) d_ff=1408
+vocab=102400, MoE 64 routed top-6 + 2 shared experts.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,                     # per-expert FFN width (fine-grained)
+    vocab_size=102_400,
+    head_dim=128,
+    moe=MoEConfig(n_experts=64, top_k=6, n_shared_experts=2),
+    source="arXiv:2401.06066; hf",
+))

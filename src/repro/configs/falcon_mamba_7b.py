@@ -1,0 +1,23 @@
+"""falcon-mamba-7b — pure Mamba-1 architecture [arXiv:2410.05355].
+
+Assigned spec: 64L d_model=4096 (attn-free) d_ff=0 vocab=65024, ssm_state=16.
+Every layer is a mamba-1 mixer (no attention, no FFN: the mixer's gated
+in/out projections play the FFN role, d_inner = 2*d_model).
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    ssm=SSMConfig(d_state=16, expand=2, d_conv=4),
+    attn_free=True,
+    tie_embeddings=True,
+    source="arXiv:2410.05355; unverified",
+    notes="mamba1 arch; RMSNorm on dt/B/C as in falcon-mamba",
+))

@@ -1,0 +1,28 @@
+"""gemma3-27b — dense, 5:1 local:global attention, 128k ctx [hf:google/gemma-3].
+
+Assigned spec: 62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144.
+head_dim=128 per the public gemma-3 configs (not d_model/n_heads).
+Local layers use a 1024-token sliding window with theta=10k; global layers
+use theta=1M.  qk-norm per gemma3.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    d_ff=21504,
+    vocab_size=262_144,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    rope_theta_local=10_000.0,
+    sliding_window=1024,
+    local_global_ratio=5,          # 5 local : 1 global
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt scaled; unverified",
+    notes="5:1 local:global; global-layer KV sequence-sharded for long_500k",
+))

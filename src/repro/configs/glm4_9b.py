@@ -1,0 +1,20 @@
+"""glm4-9b — dense GQA decoder [hf:THUDM/glm-4-9b].
+
+Assigned spec: 40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552.
+RoPE, GQA with 2 KV heads.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab_size=151_552,
+    head_dim=128,
+    rope_theta=10_000.0,
+    source="hf:THUDM/glm-4-9b; hf",
+))

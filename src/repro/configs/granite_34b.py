@@ -1,0 +1,19 @@
+"""granite-34b — llama-arch code model, MQA [arXiv:2405.04324].
+
+Assigned spec: 88L d_model=6144 48H (GQA kv=1 == MQA) d_ff=24576 vocab=49152.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-34b",
+    family="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    head_dim=128,
+    source="arXiv:2405.04324; hf",
+    notes="MQA (single KV head); deepest assigned arch (88L) — PP candidate",
+))

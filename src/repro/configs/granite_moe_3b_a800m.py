@@ -1,0 +1,22 @@
+"""granite-moe-3b-a800m — fine-grained MoE [hf:ibm-granite/granite-3.0].
+
+Assigned spec: 32L d_model=1536 24H (GQA kv=8) d_ff=512 vocab=49155,
+MoE 40 experts top-8.  (The source comment mentions 32 experts; the inline
+assigned spec "40e top-8" is taken as authoritative — see DESIGN.md §6.)
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,                      # per-expert FFN width (fine-grained)
+    vocab_size=49155,
+    head_dim=64,
+    moe=MoEConfig(n_experts=40, top_k=8),
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base scaled; hf",
+))

@@ -1,0 +1,27 @@
+"""hymba-1.5b — hybrid parallel attention + mamba heads [arXiv:2411.13676].
+
+Assigned spec: 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001,
+ssm_state=16.  Every layer runs attention and a mamba mixer in *parallel*
+on the same input and mean-fuses the branch outputs (the paper's "parallel
+heads").  Hymba uses full attention on three layers (first/middle/last) and
+sliding-window attention elsewhere.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,                  # 1600 / 25
+    sliding_window=1024,
+    global_layers=(0, 15, 31),    # full-attention layers per the hymba paper
+    ssm=SSMConfig(d_state=16, expand=2, d_conv=4),
+    hybrid=True,
+    source="arXiv:2411.13676; hf",
+    notes="parallel attn+mamba heads, mean-fused; SWA except 3 global layers",
+))

@@ -1,0 +1,22 @@
+"""internvl2-26b — VLM: InternViT frontend + InternLM2 backbone [arXiv:2404.16821].
+
+Assigned spec (backbone only): 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92553.  The InternViT modality frontend is a STUB per the assignment:
+``input_specs()`` supplies precomputed patch embeddings of shape
+(batch, seq, d_model); the backbone consumes them directly.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    head_dim=128,
+    frontend="embed",              # precomputed patch embeddings (stub)
+    source="arXiv:2404.16821; hf",
+))

@@ -1,0 +1,23 @@
+"""musicgen-large — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+Assigned spec (backbone only): 48L d_model=2048 32H (GQA kv=32 == MHA)
+d_ff=8192 vocab=2048.  The EnCodec modality frontend is a STUB per the
+assignment: ``input_specs()`` supplies precomputed frame embeddings (the sum
+of the 4 codebook embeddings) of shape (batch, seq, d_model); the single
+2048-way head predicts the next codebook token.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    head_dim=64,
+    frontend="embed",              # precomputed frame embeddings (stub)
+    source="arXiv:2306.05284; hf",
+))

@@ -1,0 +1,21 @@
+"""qwen3-1.7b — dense GQA decoder with qk-norm [hf:Qwen/Qwen3].
+
+Assigned spec: 28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=6144,
+    vocab_size=151_936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-8B family; hf",
+))

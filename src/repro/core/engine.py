@@ -1,0 +1,66 @@
+"""Distributed iteration engine: one shard_map per learning iteration.
+
+The paper's execution model (Fig. 1b) is: driver fires an action -> the
+task manager ships one stage per partition to the workers -> partial
+results reduce back to the driver.  Here a learning iteration is ONE
+``shard_map``-wrapped pure function over the bundle:
+
+    step(local_blocks, replicated) -> (new_local_blocks, reduced_scalars)
+
+Everything record-local runs without communication; anything cross-
+partition (cost sums, Gram matrices, dictionary outer products) is a
+``psum`` inside the step — the all-reduce that replaces Spark's driver
+round-trip.  The returned step is jit-compiled once and reused across
+iterations (Spark's lazy DAG -> XLA's staged graph).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bundle import Bundle
+
+
+def make_step(fn: Callable, bundle: Bundle, *, donate: bool = True,
+              static_replicated: bool = False):
+    """Compile ``fn(data_local, replicated, axes) -> (data_local', out)``
+    into a jitted distributed step over the bundle's mesh.
+
+    ``axes`` is the tuple of mesh axis names to psum over (empty when the
+    bundle is unpartitioned, e.g. the sequential reference).  ``out`` must
+    be replicated-safe (i.e. already psum-reduced by ``fn``).
+    """
+    axes = bundle.axes
+
+    if bundle.mesh is None:
+        def local_step(data, rep):
+            return fn(data, rep, ())
+        return jax.jit(local_step, donate_argnums=(0,) if donate else ())
+
+    data_spec = jax.tree.map(lambda _: bundle.record_spec(), bundle.data)
+    rep_spec = jax.tree.map(lambda _: P(), bundle.replicated)
+    out_data_shape, out_shape = jax.eval_shape(
+        lambda d, r: fn(d, r, ()),
+        _local_shapes(bundle), bundle.replicated)
+    out_data_spec = jax.tree.map(lambda _: bundle.record_spec(),
+                                 out_data_shape)
+    out_rep_spec = jax.tree.map(lambda _: P(), out_shape)
+
+    def local(data, rep):
+        return fn(data, rep, axes)
+
+    mapped = jax.shard_map(
+        local, mesh=bundle.mesh,
+        in_specs=(data_spec, rep_spec),
+        out_specs=(out_data_spec, out_rep_spec),
+        check_vma=False)
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+
+
+def _local_shapes(bundle: Bundle):
+    n = max(bundle.n_partitions, 1)
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((x.shape[0] // n,) + x.shape[1:],
+                                       x.dtype), bundle.data)

@@ -1,0 +1,60 @@
+"""Persistence policies: the paper's memory-only vs memory-and-disk.
+
+Spark semantics -> this system:
+
+  MEMORY_ONLY    : partitions live in device memory; anything evicted is
+                   *recomputed from lineage*.  JAX analogue: bundle stays
+                   device-resident between iterations, and intermediate
+                   activations inside a step are rematerialised
+                   (``jax.checkpoint`` around the step body).
+  MEMORY_AND_DISK: evicted partitions are *spilled*.  JAX analogue: the
+                   bundle round-trips through host RAM ("disk") each
+                   iteration; intermediates are saved, not recomputed.
+
+The paper's finding (Fig. 13) is that spill beats recompute when the
+working set exceeds worker memory (GS dictionary learning) and loses when
+it fits (PSF, HS) — the benchmark ``bench_persistence`` reproduces the
+trade-off shape with these two policies.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.bundle import Bundle
+
+
+class Policy(enum.Enum):
+    MEMORY_ONLY = "memory_only"
+    MEMORY_AND_DISK = "memory_and_disk"
+
+
+def wrap_step(step_fn: Callable, policy: Policy) -> Callable:
+    """Apply the recompute-vs-save discipline to a step function."""
+    if policy is Policy.MEMORY_ONLY:
+        # recompute-from-lineage: remat everything inside the step
+        def rematted(data, rep, axes):
+            inner = jax.checkpoint(lambda d: step_fn(d, rep, axes))
+            return inner(data)
+        return rematted
+    return step_fn
+
+
+def spill(bundle: Bundle) -> Any:
+    """MEMORY_AND_DISK eviction: pull the bundle to host buffers."""
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                        bundle.data)
+
+
+def restore(bundle: Bundle, host_data: Any) -> Bundle:
+    """Re-admit spilled partitions (device_put with the bundle's specs)."""
+    if bundle.mesh is None:
+        data = jax.tree.map(jax.numpy.asarray, host_data)
+        return bundle.with_data(data)
+    from jax.sharding import NamedSharding
+    shard = NamedSharding(bundle.mesh, bundle.record_spec())
+    data = jax.tree.map(lambda x: jax.device_put(x, shard), host_data)
+    return bundle.with_data(data)

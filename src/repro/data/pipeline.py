@@ -1,0 +1,70 @@
+"""Host->device input pipeline with prefetch and sharded placement.
+
+A production loader: a background thread generates/loads the next
+batches while the device computes, and each batch is device_put with the
+global batch sharding so every host only materialises its addressable
+shards (here: single host, full arrays; the placement API is the same).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import lm_batch
+from repro.parallel.sharding import MeshRules
+
+
+class PrefetchLoader:
+    """Wrap a ``make_batch(step) -> pytree`` fn with N-deep prefetch."""
+
+    def __init__(self, make_batch: Callable[[int], Dict], rules: MeshRules,
+                 *, depth: int = 2, start_step: int = 0):
+        self.make_batch = make_batch
+        self.rules = rules
+        self.depth = depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self.rules.mesh is None:
+            return batch
+        shd = self.rules.sharding(self.rules.batch_spec(1))
+        shd3 = self.rules.sharding(self.rules.batch_spec(2))
+        return {k: jax.device_put(v, shd3 if v.ndim == 3 else shd)
+                for k, v in batch.items()}
+
+    def _worker(self):
+        while not self._stop.is_set():
+            batch = self._place(self.make_batch(self._step))
+            self._q.put((self._step, batch))
+            self._step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def lm_loader(cfg: ModelConfig, rules: MeshRules, *, batch: int, seq: int,
+              seed: int = 0, start_step: int = 0, depth: int = 2
+              ) -> PrefetchLoader:
+    """Deterministic LM token loader; resume = pass ``start_step``."""
+    return PrefetchLoader(
+        lambda step: lm_batch(cfg, batch, seq, seed, step),
+        rules, depth=depth, start_step=start_step)

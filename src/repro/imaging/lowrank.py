@@ -1,0 +1,63 @@
+"""Nuclear-norm proximal operators for the low-rank deconvolution (Eq. 3).
+
+Sequential reference: full SVD of the (n_images, S*S) pixel matrix —
+exactly what the paper's driver does after reassembling the stack, and
+exactly why its low-rank speedup saturates at 1.2-2.5x.
+
+Distributed version (beyond-paper, DESIGN.md §2): randomized range-finder
+SVT that never gathers the stack.  All cross-partition traffic is two
+psum-reduced Gram/projection matrices of size (r, r) and (r, p):
+
+    Y = A @ Omega                    (local rows)
+    Q = Y chol(Y^T Y)^-T             (Y^T Y psum, r x r)
+    B = Q^T A                        (psum, r x p)
+    U S V^T = svd(B)                 (replicated, tiny)
+    A_svt = (Q U) max(S - t, 0) V^T  (local rows)
+
+The iteration count of the enclosing primal-dual loop tolerates the
+range-finder approximation (rank r chosen >= expected galaxy-stack rank).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def svt(mat: jax.Array, thresh) -> jax.Array:
+    """Exact singular-value thresholding (sequential reference)."""
+    u, s, vt = jnp.linalg.svd(mat, full_matrices=False)
+    s = jnp.maximum(s - thresh, 0.0)
+    return (u * s[None, :]) @ vt
+
+
+def randomized_svt_local(a_local: jax.Array, omega: jax.Array, thresh,
+                         axes=None, eps: float = 1e-6) -> jax.Array:
+    """SVT of the row-sharded matrix from inside a shard_map/bundle_map.
+
+    a_local: (n_local, p) rows of A; omega: (p, r) replicated test matrix;
+    ``axes``: mesh axes to psum over (None == single partition).
+    """
+    y = a_local @ omega                              # (n_loc, r)
+    gram = y.T @ y                                   # (r, r)
+    if axes:
+        gram = jax.lax.psum(gram, axes)
+    # orthogonalise through the Gram eigendecomposition (rank-deficient
+    # safe: null directions are clipped, unlike a regularised Cholesky)
+    evals, evecs = jnp.linalg.eigh(gram)
+    scale = jnp.where(evals > eps * jnp.max(evals),
+                      jax.lax.rsqrt(jnp.maximum(evals, 1e-30)), 0.0)
+    q = y @ (evecs * scale[None, :])                 # (n_loc, r) orthonormal
+    b = q.T @ a_local                                # (r, p)
+    if axes:
+        b = jax.lax.psum(b, axes)
+    u, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    s = jnp.maximum(s - thresh, 0.0)
+    return (q @ u) * s[None, :] @ vt                 # (n_loc, p)
+
+
+def make_test_matrix(p: int, rank: int, oversample: int = 8,
+                     key: Optional[jax.Array] = None) -> jax.Array:
+    key = key if key is not None else jax.random.PRNGKey(7)
+    return jax.random.normal(key, (p, rank + oversample)) / jnp.sqrt(p)

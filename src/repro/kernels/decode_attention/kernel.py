@@ -1,0 +1,95 @@
+"""Flash-decode Pallas kernel: one query token against a long KV cache.
+
+The decode_32k / long_500k serve steps are HBM-bandwidth bound on the KV
+cache read; the kernel streams (block_k x D) cache tiles through VMEM
+once, with the online-softmax state (m, l, acc) held in registers/VMEM.
+To fill the MXU/VPU lanes despite a single query row, all H query heads
+that share a kv head are processed together: the score tile is
+(group x block_k), so MQA (group=48) and GQA fill lanes naturally.
+
+Grid: (B, K) — one program per (sequence, kv head).  VMEM per program:
+k/v tiles 2 x block_k x D (f32), scores group x block_k, accumulators
+group x (D + 2).  block_k = 512, D = 128: ~530 KB.
+
+Sliding-window decode clips the streamed range to the last ``window``
+positions — the local-attention layers of gemma3/hymba decode in O(w)
+regardless of cache length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, scale, block_k,
+                seq_k, window):
+    group, d = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * scale           # (G, D)
+    length = len_ref[0]
+
+    m = jnp.full((group,), NEG_INF, jnp.float32)
+    l = jnp.zeros((group,), jnp.float32)
+    acc = jnp.zeros((group, d), jnp.float32)
+
+    hi = pl.cdiv(length, block_k)
+    lo = 0
+    if window:
+        lo = jnp.maximum((length - window) // block_k, 0)
+
+    def body(kv_i, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kv_i * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(kv_i * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        s = q @ k.T                                      # (G, bk)
+        pos = kv_i * block_k + jax.lax.iota(jnp.int32, block_k)
+        keep = pos[None, :] < length
+        if window:
+            keep &= pos[None, :] >= (length - window)
+        s = jnp.where(keep, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m, l, acc))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, lengths, *, window: int = 0, scale=None,
+                         block_k: int = 512, interpret: bool = True):
+    """q: (B, H, D); k/v: (B, K, T, D); lengths: (B,). -> (B, H, D)."""
+    B, H, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    group = H // K
+    scale = D ** -0.5 if scale is None else scale
+    block_k = min(block_k, T)
+    assert T % block_k == 0
+
+    q4 = q.reshape(B, K, group, D)
+    grid = (B, K)
+    kernel = functools.partial(_dec_kernel, scale=scale, block_k=block_k,
+                               seq_k=T, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec((None, None, group, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, group, D),
+                               lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, group, D), q.dtype),
+        interpret=interpret,
+    )(lengths, q4, k, v)
+    return out.reshape(B, H, D)

@@ -1,0 +1,20 @@
+"""Jitted public wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("window", "use_kernel", "block_k",
+                                   "interpret"))
+def decode_attention(q, k, v, lengths, *, window: int = 0,
+                     use_kernel: bool = True, block_k: int = 512,
+                     interpret: bool = True):
+    if not use_kernel:
+        return decode_attention_ref(q, k, v, lengths, window=window)
+    return decode_attention_fwd(q, k, v, lengths, window=window,
+                                block_k=block_k, interpret=interpret)

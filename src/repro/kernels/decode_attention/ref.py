@@ -1,0 +1,33 @@
+"""Oracle for single-token cached decode attention.
+
+q: (B, H, D) one query per sequence; k/v caches: (B, K, T, D);
+lengths: (B,) valid prefix lengths (the new token sits at length-1).
+Optional sliding window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_ref(q, k, v, lengths, *, window: int = 0,
+                         scale=None):
+    B, H, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    group = H // K
+    scale = D ** -0.5 if scale is None else scale
+    k_rep = jnp.repeat(k, group, axis=1)
+    v_rep = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                        k_rep.astype(jnp.float32)) * scale
+    pos = jnp.arange(T)[None, None, :]
+    last = (lengths - 1)[:, None, None]
+    keep = pos <= last
+    if window:
+        keep &= pos > (last - window)
+    logits = jnp.where(keep, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", p,
+                      v_rep.astype(jnp.float32)).astype(q.dtype)

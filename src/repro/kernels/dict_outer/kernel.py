@@ -1,0 +1,63 @@
+"""Fused SW^T / WW^T outer products — Pallas TPU kernel.
+
+The SCDL dictionary update (paper Eq. 6-7) reduces S^T W (P x A) and
+W^T W (A x A) over the sample axis K ~ 40k every iteration.  Doing the
+two einsums separately streams W from HBM twice; the fused kernel reads
+each (block_k x A) code tile once and feeds BOTH accumulators while the
+tile is in VMEM — the arithmetic-intensity fix for the use case's
+dominant reduction (and the local half of the paper's step-9 map-reduce;
+the psum over shards happens outside).
+
+Grid: (K / block_k,) sequential accumulation into VMEM-resident (P, A)
+and (A, A) fp32 accumulators (dimension_semantics: arbitrary — the
+revisit order is the accumulation).  A <= 2056 pads to 2176 lanes;
+P <= 289 rows. VMEM: acc tiles (P+A) x A x 4 B ~ 19 MB at the GS
+maximum — block the A axis at 1024 when above (ops.py picks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _outer_kernel(s_ref, w_ref, sw_ref, ww_ref):
+    ki = pl.program_id(0)
+    s = s_ref[...].astype(jnp.float32)                  # (bk, P)
+    w = w_ref[...].astype(jnp.float32)                  # (bk, A_blk)
+
+    @pl.when(ki == 0)
+    def _init():
+        sw_ref[...] = jnp.zeros_like(sw_ref)
+        ww_ref[...] = jnp.zeros_like(ww_ref)
+
+    sw_ref[...] += s.T @ w
+    ww_ref[...] += w.T @ w
+
+
+def dict_outer_fwd(S, W, *, block_k: int = 512, interpret: bool = True):
+    """S: (K, P); W: (K, A). Returns (S^T W (P, A), W^T W (A, A)) fp32."""
+    K, P = S.shape
+    A = W.shape[1]
+    block_k = min(block_k, K)
+    assert K % block_k == 0
+
+    return pl.pallas_call(
+        _outer_kernel,
+        grid=(K // block_k,),
+        in_specs=[
+            pl.BlockSpec((block_k, P), lambda i: (i, 0)),
+            pl.BlockSpec((block_k, A), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((P, A), lambda i: (0, 0)),
+            pl.BlockSpec((A, A), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, A), jnp.float32),
+            jax.ShapeDtypeStruct((A, A), jnp.float32),
+        ],
+        interpret=interpret,
+    )(S, W)

@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the fused dictionary outer products."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.dict_outer.kernel import dict_outer_fwd
+from repro.kernels.dict_outer.ref import dict_outer_ref
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_k", "interpret"))
+def dict_outer(S, W, *, use_kernel: bool = True, block_k: int = 512,
+               interpret: bool = True):
+    if not use_kernel:
+        return dict_outer_ref(S, W)
+    return dict_outer_fwd(S, W, block_k=block_k, interpret=interpret)

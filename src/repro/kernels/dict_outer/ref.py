@@ -1,0 +1,12 @@
+"""Oracle for the fused SCDL outer-product accumulation (Algorithm 2,
+step 9): given a sample block S (K, P) and codes W (K, A), produce
+S^T W (P, A) and W^T W (A, A) in fp32."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dict_outer_ref(S, W):
+    Sf = S.astype(jnp.float32)
+    Wf = W.astype(jnp.float32)
+    return Sf.T @ Wf, Wf.T @ Wf

@@ -1,0 +1,26 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+``flash_attention`` dispatches to the Pallas kernel (interpret-mode on
+CPU, compiled on TPU) or the jnp oracle; the model's attention layer can
+call this with ``use_kernel=True`` on TPU deployments.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_kernel",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_kernel: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)

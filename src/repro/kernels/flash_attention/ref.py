@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Computes exact causal (optionally sliding-window) GQA attention for one
+batch of heads.  Shapes follow the kernel's layout:
+    q: (B, H, S, D);  k, v: (B, K, T, D)  with H = K * group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    group = H // K
+    scale = D ** -0.5 if scale is None else scale
+    k_rep = jnp.repeat(k, group, axis=1)
+    v_rep = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k_rep.astype(jnp.float32)) * scale
+    T = k.shape[2]
+    q_pos = jnp.arange(S)[:, None] + (T - S)      # align ends (prefill)
+    k_pos = jnp.arange(T)[None, :]
+    keep = jnp.ones((S, T), bool)
+    if causal:
+        keep &= k_pos <= q_pos
+    if window:
+        keep &= k_pos > (q_pos - window)
+    logits = jnp.where(keep, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v_rep.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,90 @@
+"""Chunked selective scan — Pallas TPU kernel.
+
+TPU adaptation of the CUDA mamba scan (DESIGN.md §8): the GPU kernel
+serialises time inside one SM with warp shuffles; on TPU we keep the
+running state (dI_blk, dS) resident in VMEM across the whole sequence
+and walk it chunk by chunk, vectorising each chunk over the (8,128)
+VPU lanes via a within-chunk prefix product.  Channels are independent,
+so the grid tiles (batch, d_inner / block_d) and the time loop is
+sequential per program — the state never leaves VMEM (the HBM win the
+CUDA kernel gets from SRAM residency).
+
+VMEM per program: a/b chunk tiles 2 x chunk x block_d x dS (f32),
+C chunk (chunk, dS), state block_d x dS, y chunk chunk x block_d.
+chunk = 64, block_d = 256, dS = 16: ~2.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, *,
+                 chunk, seq_len, block_d, d_state):
+    h = h0_ref[...].astype(jnp.float32)                  # (bd, dS)
+    n_chunks = seq_len // chunk
+
+    def outer(ci, carry):
+        h = carry
+        a = pl.load(a_ref, (pl.dslice(ci * chunk, chunk), slice(None),
+                            slice(None))).astype(jnp.float32)
+        b = pl.load(b_ref, (pl.dslice(ci * chunk, chunk), slice(None),
+                            slice(None))).astype(jnp.float32)
+        c = pl.load(c_ref, (pl.dslice(ci * chunk, chunk),
+                            slice(None))).astype(jnp.float32)
+
+        # within-chunk inclusive scan (log-depth, lane-parallel over
+        # (block_d, dS)): (a, b) o (a', b') = (a a', b a' + b')
+        def combine(x, y):
+            ax, bx = x
+            ay, by = y
+            return ax * ay, bx * ay + by
+
+        a_run, b_run = jax.lax.associative_scan(combine, (a, b), axis=0)
+        h_all = a_run * h[None] + b_run                  # (chunk, bd, dS)
+        y = jnp.einsum("tds,ts->td", h_all, c)
+        pl.store(y_ref, (pl.dslice(ci * chunk, chunk), slice(None)),
+                 y.astype(y_ref.dtype))
+        return h_all[-1]
+
+    h = jax.lax.fori_loop(0, n_chunks, outer, h)
+    hout_ref[...] = h.astype(hout_ref.dtype)
+
+
+def selective_scan_fwd(a, b, C, h0, *, chunk: int = 64,
+                       block_d: int = 256, interpret: bool = True):
+    """a, b: (B, L, dI, dS); C: (B, L, dS); h0: (B, dI, dS).
+
+    Returns (y (B, L, dI) f32, h_last (B, dI, dS) f32).
+    """
+    B, L, dI, dS = a.shape
+    block_d = min(block_d, dI)
+    chunk = min(chunk, L)
+    assert dI % block_d == 0 and L % chunk == 0
+
+    grid = (B, dI // block_d)
+    kernel = functools.partial(_scan_kernel, chunk=chunk, seq_len=L,
+                               block_d=block_d, d_state=dS)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, L, block_d, dS), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, L, block_d, dS), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, L, dS), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, block_d, dS), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, L, block_d), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((None, block_d, dS), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, dI), jnp.float32),
+            jax.ShapeDtypeStruct((B, dI, dS), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, C, h0)
+    return y, h_last

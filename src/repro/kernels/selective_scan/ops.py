@@ -1,0 +1,20 @@
+"""Jitted public wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan_fwd
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "chunk", "block_d",
+                                   "interpret"))
+def selective_scan(a, b, C, h0, *, use_kernel: bool = True,
+                   chunk: int = 64, block_d: int = 256,
+                   interpret: bool = True):
+    if not use_kernel:
+        return selective_scan_ref(a, b, C, h0)
+    return selective_scan_fwd(a, b, C, h0, chunk=chunk, block_d=block_d,
+                              interpret=interpret)

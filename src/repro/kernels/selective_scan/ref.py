@@ -1,0 +1,21 @@
+"""Oracle for the chunked mamba selective scan.
+
+Sequential-in-time reference: h_t = a_t * h_{t-1} + b_t; y_t = <h_t, C_t>.
+a, b: (B, L, dI, dS) f32; C: (B, L, dS) f32; h0: (B, dI, dS).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(a, b, C, h0):
+    def step(h, xs):
+        at, bt, ct = xs
+        h = at * h + bt                                  # (B, dI, dS)
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    xs = (a.swapaxes(0, 1), b.swapaxes(0, 1), C.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h_last                     # (B, L, dI), state

@@ -1,0 +1,32 @@
+"""Jitted public wrapper for the starlet-smoothing kernel, plus the full
+batched decomposition built from it."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.starlet2d.kernel import smooth_fwd
+from repro.kernels.starlet2d.ref import smooth_ref
+
+
+@partial(jax.jit, static_argnames=("scale", "use_kernel", "block_n",
+                                   "interpret"))
+def smooth(imgs, *, scale: int, use_kernel: bool = True,
+           block_n: int = 128, interpret: bool = True):
+    if not use_kernel:
+        return smooth_ref(imgs, scale)
+    return smooth_fwd(imgs, scale, block_n=block_n, interpret=interpret)
+
+
+def decompose(imgs, n_scales: int, **kw):
+    """Batched starlet analysis via the kernel: (N,H,W) -> (J+1,N,H,W)."""
+    scales = []
+    c = imgs
+    for j in range(n_scales):
+        c_next = smooth(c, scale=j, **kw)
+        scales.append(c - c_next)
+        c = c_next
+    scales.append(c)
+    return jnp.stack(scales)

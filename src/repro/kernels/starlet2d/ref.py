@@ -1,0 +1,20 @@
+"""Oracle for the batched starlet scale kernel: one B3 a-trous smoothing
+over a batch of stamps (periodic boundaries), matching
+``repro.imaging.starlet.smooth``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_K = jnp.array([1.0, 4.0, 6.0, 4.0, 1.0]) / 16.0
+
+
+def smooth_ref(imgs, scale: int):
+    """imgs: (N, H, W) -> (N, H, W), one smoothing at dyadic ``scale``."""
+    step = 1 << scale
+    out = imgs
+    for axis in (-1, -2):
+        acc = _K[2] * out
+        for t, off in ((0, -2), (1, -1), (3, 1), (4, 2)):
+            acc = acc + _K[t] * jnp.roll(out, off * step, axis=axis)
+        out = acc
+    return out

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the dry-run needs 512 placeholder
+CPU devices to build the production meshes.  (Smoke tests and benchmarks
+import other modules and see 1 device.)
+
+Per cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with:
+  - compiled.memory_analysis() (per-device bytes: the fits-in-HBM proof),
+  - compiled.cost_analysis() (XLA's own flops/bytes — body-once semantics),
+  - the trip-count-corrected HLO stats (dot FLOPs, HBM-traffic model,
+    collective bytes by type) from repro.launch.hlo_analysis,
+  - analytic MODEL_FLOPS and the config fingerprint.
+
+Usage:
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k --mesh single
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, shape_applicable)
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import MeshRules
+from repro.training import steps as steps_lib
+
+V5E = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
+       "hbm_bytes": 16 * 1024**3}
+
+
+def cell_name(arch: str, shape: str, mesh: str) -> str:
+    return f"{arch}__{shape}__{mesh}"
+
+
+def list_cells():
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if shape_applicable(cfg, shape):
+                cells.append((arch, shape.name))
+    return cells
+
+
+def build_rules(cfg, shape, mesh, seq_shard: bool = False) -> MeshRules:
+    dp_size = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp_size *= mesh.shape[a]
+    shard_seq = (shape.kind == "decode" and shape.global_batch % dp_size != 0)
+    return MeshRules(mesh=mesh, shard_cache_seq=shard_seq,
+                     seq_shard_activations=seq_shard and shape.kind == "train")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               accum_steps: int = 1, q_chunk: int = 1024,
+               zero1: bool = True, remat: bool = True,
+               seq_shard: bool = False, fsdp: bool = False,
+               accum_bf16: bool = False, mamba_fused: bool = False,
+               mamba_chunk: int = 0, dp_only: bool = False,
+               kv_quant: bool = False):
+    """Returns (lowered, compiled, meta) for one cell."""
+    cfg = get_config(arch)
+    if cfg.ssm is not None and (mamba_fused or mamba_chunk):
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(
+                cfg.ssm, fused=mamba_fused,
+                chunk=mamba_chunk or cfg.ssm.chunk))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if dp_only and shape.global_batch % mesh.size != 0:
+        dp_only = False          # e.g. batch 256 on the 512-chip mesh
+    rules = build_rules(cfg, shape, mesh, seq_shard=seq_shard)
+    if fsdp or dp_only:
+        rules = dataclasses.replace(rules, fsdp=fsdp, dp_only=dp_only)
+
+    pshapes, pspecs, p_sds = steps_lib.abstract_params(cfg, rules)
+    batch_sds = steps_lib.input_specs(cfg, shape, rules)
+
+    def shard_bytes(tree) -> int:
+        """Exact per-device bytes of a sharded ShapeDtypeStruct tree."""
+        total = 0
+        for leaf in jax.tree.leaves(tree):
+            if leaf is None:
+                continue
+            shp = (leaf.sharding.shard_shape(leaf.shape)
+                   if leaf.sharding is not None else leaf.shape)
+            n = 1
+            for d in shp:
+                n *= d
+            total += n * leaf.dtype.itemsize
+        return total
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(mesh.shape),
+        "chips": mesh.size,
+        "kind": shape.kind,
+        "tokens_per_step": (shape.tokens if shape.kind != "decode"
+                            else shape.global_batch),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "options": {"accum_steps": accum_steps, "q_chunk": q_chunk,
+                    "zero1": zero1, "remat": remat,
+                    "seq_shard": rules.seq_shard_activations,
+                    "fsdp": fsdp, "accum_bf16": accum_bf16,
+                    "mamba_fused": mamba_fused, "dp_only": dp_only,
+                    "kv_quant": kv_quant,
+                    "shard_cache_seq": rules.shard_cache_seq},
+    }
+
+    with mesh:
+        if shape.kind == "train":
+            _, ospecs, o_sds = steps_lib.abstract_opt_state(
+                cfg, rules, pshapes, pspecs, zero1=zero1)
+            step = steps_lib.build_train_step(
+                cfg, rules, accum_steps=accum_steps, q_chunk=q_chunk,
+                remat=remat,
+                grad_specs=ospecs["m"] if accum_steps > 1 else None,
+                accum_dtype=jnp.bfloat16 if accum_bf16 else jnp.float32)
+            fn = jax.jit(step, donate_argnums=(0, 1))
+            lowered = fn.lower(p_sds, o_sds, batch_sds)
+            # state: params + opt (donated/aliased, counted once) + batch
+            meta["state_bytes_per_device"] = (
+                shard_bytes(p_sds) + shard_bytes(o_sds)
+                + shard_bytes(batch_sds))
+        elif shape.kind == "prefill":
+            step = steps_lib.build_prefill_step(cfg, rules, q_chunk=q_chunk)
+            fn = jax.jit(step)
+            lowered = fn.lower(p_sds, batch_sds)
+            cache_out = steps_lib.cache_specs(cfg, shape, rules)
+            meta["state_bytes_per_device"] = (
+                shard_bytes(p_sds) + shard_bytes(batch_sds)
+                + shard_bytes(cache_out))
+        else:  # decode
+            cache_sds = steps_lib.cache_specs(cfg, shape, rules,
+                                              kv_quant=kv_quant)
+            step = steps_lib.build_serve_step(cfg, rules)
+            fn = jax.jit(step, donate_argnums=(1,))
+            lowered = fn.lower(p_sds, cache_sds, batch_sds)
+            meta["state_bytes_per_device"] = (
+                shard_bytes(p_sds) + shard_bytes(cache_sds)
+                + shard_bytes(batch_sds))
+        compiled = lowered.compile()
+    return lowered, compiled, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, **opts) -> dict:
+    mesh_tag = "multi" if multi_pod else "single"
+    out = out_dir / (cell_name(arch, shape_name, mesh_tag) + ".json")
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    t0 = time.time()
+    status: dict = {"cell": cell_name(arch, shape_name, mesh_tag)}
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod,
+                                             **opts)
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        mem = {k: int(getattr(ma, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")}
+        mem["per_device_total"] = (mem["argument_size_in_bytes"]
+                                   + mem["output_size_in_bytes"]
+                                   + mem["temp_size_in_bytes"]
+                                   - mem["alias_size_in_bytes"])
+        ca = compiled.cost_analysis() or {}
+        cost = {k: float(ca[k]) for k in ("flops", "bytes accessed")
+                if k in ca}
+        hlo = analyze(compiled.as_text()).to_dict()
+        status.update(meta)
+        state_b = meta.get("state_bytes_per_device", 0)
+        status.update({
+            "ok": True,
+            "compile_seconds": round(t_compile, 1),
+            "memory_analysis": mem,
+            "cost_analysis": cost,
+            "hlo": hlo,
+            # raw CPU-backend total (includes the f32 shadow copies the
+            # CPU emitter makes of bf16 dot/dus operands — absent on TPU;
+            # see EXPERIMENTS.md §Dry-run) vs exact sharded state bytes
+            "fits_hbm_raw": mem["per_device_total"] <= V5E["hbm_bytes"],
+            "fits_hbm_state": state_b <= V5E["hbm_bytes"],
+        })
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        status.update({
+            "ok": False,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        })
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(status, indent=1))
+    flag = "OK " if status.get("ok") else "FAIL"
+    mem_gb = (status.get("memory_analysis", {}).get("per_device_total", 0)
+              / 1024**3)
+    print(f"[{flag}] {status['cell']:54s} "
+          f"compile={status.get('compile_seconds', 0):7.1f}s "
+          f"mem/dev={mem_gb:6.2f}GiB", flush=True)
+    return status
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--q-chunk", type=int, default=1024)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--accum-bf16", action="store_true")
+    ap.add_argument("--mamba-fused", action="store_true")
+    ap.add_argument("--mamba-chunk", type=int, default=0)
+    ap.add_argument("--dp-only", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--tuned", action="store_true",
+                    help="per-cell tuned policies (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = list_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            if args.tuned:
+                from repro.launch.policies import tuned_options
+                opts = tuned_options(arch, shape)
+            else:
+                opts = dict(accum_steps=args.accum_steps,
+                            q_chunk=args.q_chunk,
+                            seq_shard=args.seq_shard,
+                            fsdp=args.fsdp,
+                            accum_bf16=args.accum_bf16,
+                            mamba_fused=args.mamba_fused,
+                            mamba_chunk=args.mamba_chunk,
+                            dp_only=args.dp_only,
+                            kv_quant=args.kv_quant,
+                            zero1=not args.no_zero1,
+                            remat=not args.no_remat)
+            st = run_cell(arch, shape, multi, out_dir, force=args.force,
+                          **opts)
+            n_fail += 0 if st.get("ok") else 1
+    print(f"done; {n_fail} failing cells")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,532 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count (verified empirically — a 10-iteration scan reports 1x the body
+FLOPs), which would under-count every scanned-layer model by ~n_layers.
+This module re-derives roofline inputs from ``compiled.as_text()``:
+
+  - per-device dot FLOPs, with while-loop bodies multiplied by their trip
+    counts (parsed from the loop-condition constant), nested loops
+    multiplying through;
+  - per-device HBM traffic estimate: operand+result bytes of every
+    top-level op (fusions count as one read+write unit, which models
+    post-fusion HBM traffic more faithfully than per-primitive sums);
+  - collective bytes by op type (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute), operand-sized, trip-multiplied.
+
+All numbers are PER DEVICE (the SPMD module is the per-device program);
+multiply by chip count for cluster totals.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# ops that move data but do no math; parameters/tuples/bitcasts are free
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "while",
+    "conditional", "call",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_KIND_RE = re.compile(r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_DIMS_RE = {
+    "lb": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+    "lc": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "rb": re.compile(r"rhs_batch_dims=\{([0-9,]*)\}"),
+    "rc": re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}"),
+}
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    operands: List[str]
+    called: List[str]
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return type_bytes(self.type_str)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    by_name: Dict[str, Op] = field(default_factory=dict)
+
+
+def _balanced(s: str, open_ch: str = "(", close_ch: str = ")") -> int:
+    """Index one past the paren that closes s[0] (which must be open_ch)."""
+    depth = 0
+    for j, ch in enumerate(s):
+        if ch == open_ch:
+            depth += 1
+        elif ch == close_ch:
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(s)
+
+
+def _parse_op_line(s: str) -> Optional[Op]:
+    """Parse `[ROOT ]%name = TYPE kind(operands), attrs...`.
+
+    TYPE may be a tuple `(f32[..], /*index=5*/s32[..], ...)` — the comment
+    markers contain `=`, so this uses balanced-paren scanning, not regex.
+    """
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):                      # tuple type
+        end = _balanced(rest)
+        type_str = rest[:end]
+        rest = rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest = rest[sp + 1:].lstrip()
+    m = _KIND_RE.match(rest)
+    if not m:
+        return None
+    kind = m.group(1)
+    call = rest[len(kind):]
+    end = _balanced(call)
+    operand_sec = call[1:end - 1]
+    attr_sec = call[end:]
+    operands = _OPERAND_RE.findall(operand_sec)
+    called = _OPERAND_RE.findall(attr_sec)        # computation refs in attrs
+    return Op(name, kind, type_str, operands, called, s)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    """Parse optimized HLO text -> ({name: Computation}, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        # computation header: `%name (...` or `ENTRY %name (...` at top level
+        if (line.startswith("%") or line.startswith("ENTRY")) \
+                and "{" in line:
+            is_entry = line.startswith("ENTRY")
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if is_entry:
+                    entry = cur.name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        op = _parse_op_line(stripped)
+        if op is not None:
+            cur.ops.append(op)
+            cur.by_name[op.name] = op
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comps, entry
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Heuristic: the loop bound is the max integer constant in the cond."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        for m in _CONST_INT_RE.finditer(op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    """2*B*M*N*K from operand shapes + dimension-number attrs."""
+    if len(op.operands) < 2:
+        return 0.0
+    lhs = comp.by_name.get(op.operands[0])
+    rhs = comp.by_name.get(op.operands[1])
+    if lhs is None or rhs is None:
+        return 0.0
+    ldims = _shape_dims(lhs.type_str)
+    rdims = _shape_dims(rhs.type_str)
+    rb = _DIMS_RE["rb"].search(op.line)
+    rc = _DIMS_RE["rc"].search(op.line)
+    rb_idx = [int(i) for i in rb.group(1).split(",") if i] if rb else []
+    rc_idx = [int(i) for i in rc.group(1).split(",") if i] if rc else []
+    n = 1
+    for i, d in enumerate(rdims):
+        if i not in rb_idx and i not in rc_idx:
+            n *= d
+    lprod = 1
+    for d in ldims:
+        lprod *= d
+    return 2.0 * lprod * n
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0                       # per-device dot flops
+    traffic_bytes: float = 0.0               # upper bound: every op
+    traffic_fused_bytes: float = 0.0         # lower bound: see analyze()
+    collective_bytes: float = 0.0            # per-device, operand-sized
+    collective_by_type: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    collective_by_site: Dict[str, float] = field(default_factory=dict)
+    traffic_by_sig: Dict[str, float] = field(default_factory=dict)
+    n_while: int = 0
+    trip_counts: List[int] = field(default_factory=list)
+
+    def top_traffic(self, n: int = 10):
+        return sorted(self.traffic_by_sig.items(), key=lambda kv: -kv[1])[:n]
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "traffic_bytes": self.traffic_bytes,
+            "traffic_fused_bytes": self.traffic_fused_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_type": dict(self.collective_by_type),
+            "collective_count": dict(self.collective_count),
+            "collective_top": sorted(self.collective_by_site.items(),
+                                     key=lambda kv: -kv[1])[:12],
+            "traffic_top": self.top_traffic(),
+            "n_while": self.n_while,
+            "trip_counts": sorted(self.trip_counts, reverse=True)[:16],
+        }
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_hlo(text)
+    stats = HloStats()
+    visiting: set = set()
+
+    _CONVERTISH = {"parameter", "constant", "convert", "bitcast"}
+
+    def _is_dus_fusion(op: Op) -> bool:
+        """Fusion whose root is a dynamic-update-slice (stash writes)."""
+        if op.kind != "fusion" or not op.called:
+            return False
+        body = comps.get(op.called[0])
+        if not body or not body.ops:
+            return False
+        return any(o.kind == "dynamic-update-slice" for o in body.ops[-2:])
+
+    def _is_ds_fusion(op: Op) -> bool:
+        """Fusion that slices a stacked operand (scan reading layer i of
+        stacked params/stash).  Charging the whole stack per iteration
+        would overcount by ~n_layers; the real read is slice-sized."""
+        if op.kind != "fusion" or not op.called:
+            return False
+        body = comps.get(op.called[0])
+        if not body:
+            return False
+        return any(o.kind == "dynamic-slice" for o in body.ops)
+
+    def _is_convert_only(op: Op) -> bool:
+        """convert/bitcast-only ops or fusions: dtype shadow copies the
+        CPU emitter makes of bf16 dot/dus operands.  The TPU backend
+        consumes bf16 natively — charge no HBM traffic."""
+        if op.kind in ("convert", "bitcast"):
+            return True
+        if op.kind != "fusion" or not op.called:
+            return False
+        body = comps.get(op.called[0])
+        if not body:
+            return False
+        return all(o.kind in _CONVERTISH for o in body.ops)
+
+    def _dtype_of(type_str: str) -> str:
+        m = _SHAPE_RE.search(type_str)
+        return m.group(1) if m else "f32"
+
+    def _logical_dtype(comp: Computation, op: Optional[Op]) -> str:
+        if op is None:
+            return "f32"
+        if _is_convert_only(op) and op.operands:
+            inner = comp.by_name.get(op.operands[0])
+            if inner is not None:
+                return _dtype_of(inner.type_str)
+        return _dtype_of(op.type_str)
+
+    def _operand_logical_bytes(comp: Computation, name: str) -> float:
+        """Bytes of an operand at its pre-convert (logical) dtype.
+
+        Also resolves through dots: XLA:CPU's float normalization turns
+        bf16 x bf16 -> bf16 dots into f32 BEFORE SPMD partitioning, so
+        the TP all-reduce lands on an f32 value that is bf16 in the jax
+        program (and on TPU).  A dot whose operands are logically bf16 is
+        charged at bf16 width.  (Attention einsums with an explicit
+        preferred_element_type=f32 don't feed collectives directly, so
+        this resolution is safe for our module structure.)
+        """
+        src = comp.by_name.get(name)
+        if src is None:
+            return 0.0
+        # resolve through pass-through wrapper fusions (copy/bitcast/convert)
+        hops = 0
+        while (src.kind == "fusion" and src.called and hops < 3
+               and (body := comps.get(src.called[0])) is not None
+               and all(o.kind in _PASSTHRU for o in body.ops)
+               and src.operands):
+            big = max(src.operands,
+                      key=lambda o: type_bytes(comp.by_name[o].type_str)
+                      if o in comp.by_name else 0)
+            nxt = comp.by_name.get(big)
+            if nxt is None:
+                break
+            src = nxt
+            hops += 1
+        b = float(type_bytes(src.type_str))
+        if _is_convert_only(src) and src.operands:
+            inner = comp.by_name.get(src.operands[0])
+            if inner is not None:
+                b = min(b, float(type_bytes(inner.type_str)))
+        elif src.kind == "dot" and _dtype_of(src.type_str) == "f32":
+            if src.operands and all(_src_width(comp, o) <= 2
+                                    for o in src.operands):
+                b /= 2.0
+        return b
+
+    _PASSTHRU = {"parameter", "constant", "convert", "bitcast", "copy",
+                 "transpose", "reshape", "broadcast",
+                 "get-tuple-element"}
+
+    def _src_width(comp: Computation, name: str, depth: int = 4) -> int:
+        """Smallest element width (bytes) along the producer chain of
+        pass-through ops — the logical dtype before CPU float
+        normalization widened it."""
+        op = comp.by_name.get(name)
+        if op is None:
+            return 4
+        here = DTYPE_BYTES.get(_dtype_of(op.type_str), 4)
+        if depth <= 0:
+            return here
+        if op.kind in ("convert", "bitcast", "copy", "transpose",
+                       "reshape") and op.operands:
+            return min(here, _src_width(comp, op.operands[0], depth - 1))
+        if op.kind == "fusion" and op.called:
+            body = comps.get(op.called[0])
+            if body and all(o.kind in _PASSTHRU for o in body.ops):
+                ws = [_src_width(comp, o, depth - 1)
+                      for o in op.operands]
+                if ws:
+                    return min(here, min(ws))
+        return here
+
+    def op_bytes(comp: Computation, op: Op) -> float:
+        """HBM-traffic model for one top-level op.
+
+        - in-place update patterns (dus / dus-rooted fusions) charge the
+          slice, not the whole aliased buffer (XLA:TPU updates in place;
+          charging the full stash per layer overcounts ~n_layers x);
+        - dtype-shadow converts charge nothing, and operands are charged
+          at their logical (pre-convert) width.
+        """
+        if _is_convert_only(op):
+            return 0.0
+        operand_bytes = [_operand_logical_bytes(comp, o)
+                         for o in op.operands]
+        if op.kind == "dynamic-update-slice" or _is_dus_fusion(op):
+            big = float(op.result_bytes)
+            small = [b for b in operand_bytes if b < big]
+            return 2.0 * max(small) if small else big
+        if op.kind == "dynamic-slice" or (
+                _is_ds_fusion(op)
+                and operand_bytes
+                and max(operand_bytes) > 2 * op.result_bytes):
+            return 2.0 * float(op.result_bytes)
+        total = float(op.result_bytes)
+        skipped_alias = False
+        for b in operand_bytes:
+            if not skipped_alias and b == op.result_bytes:
+                skipped_alias = True      # likely aliased/in-place operand
+                continue
+            total += b
+        return total
+
+    def _fusion_contains(op: Op, kinds) -> bool:
+        if op.kind != "fusion" or not op.called:
+            return False
+        body = comps.get(op.called[0])
+        return bool(body) and any(o.kind in kinds for o in body.ops)
+
+    _MATERIALIZE = {"dot", "custom-call", "gather", "scatter", "sort",
+                    "dynamic-update-slice", "reduce", "concatenate",
+                    "dynamic-slice"}
+
+    def _is_materialization(op: Op) -> bool:
+        """Ops that must touch HBM even under TPU-grade fusion: matmul
+        operands/results, stash slices, gathers/scatters/sorts, big
+        reductions.  Pure elementwise chains (CPU kLoop fusions) are
+        assumed fused into neighbours — the optimistic bound."""
+        if op.kind in _MATERIALIZE:
+            return True
+        base = op.kind.removesuffix("-start")
+        if base in COLLECTIVES:
+            return True
+        return _fusion_contains(op, _MATERIALIZE)
+
+    _users_cache: Dict[str, Dict[str, list]] = {}
+
+    def _users_of(comp: Computation) -> Dict[str, list]:
+        if comp.name not in _users_cache:
+            users: Dict[str, list] = {}
+            for o in comp.ops:
+                for nm in o.operands:
+                    users.setdefault(nm, []).append(o)
+            _users_cache[comp.name] = users
+        return _users_cache[comp.name]
+
+    def _reduce_scatterable(comp: Computation, op: Op) -> float:
+        """If every (transitive) consumer of an all-reduce slices the
+        result down by >=4x, return the largest sliced size (else 0).
+
+        Same-size elementwise consumers (the dx add chains in layer
+        backward) are followed through: on TPU, AllReduceReassociate
+        sinks the reduce below the adds and ReduceScatterCreator folds
+        the following slice — the CPU pipeline runs neither pass.
+        """
+        if not op.kind.startswith("all-reduce"):
+            return 0.0
+        full = float(op.result_bytes)
+        users = _users_of(comp)
+        # `full` per element: combined (tuple) all-reduces divide first
+        n_parts = max(op.type_str.count("]"), 1) if \
+            op.type_str.startswith("(") else 1
+        elem = full / n_parts
+        seen, frontier = set(), [op.name]
+        biggest, depth = 0.0, 0
+        while frontier and depth < 6:
+            nxt = []
+            for name in frontier:
+                for c in users.get(name, []):
+                    if c.name in seen:
+                        continue
+                    seen.add(c.name)
+                    rb = float(c.result_bytes)
+                    if rb * 4 <= elem:
+                        biggest = max(biggest, rb)     # slicing consumer
+                    elif rb <= full * 1.01 and c.kind in (
+                            "add", "subtract", "fusion", "convert",
+                            "copy", "bitcast", "multiply",
+                            "get-tuple-element"):
+                        nxt.append(c.name)             # follow the chain
+                    else:
+                        return 0.0                     # escapes full-size
+            frontier = nxt
+            depth += 1
+        if frontier:                                   # unresolved chain
+            return 0.0
+        return biggest
+
+    def walk(comp_name: str, mult: float, traffic: bool):
+        if comp_name not in comps or comp_name in visiting:
+            return
+        comp = comps[comp_name]
+        visiting.add(comp_name)
+        for op in comp.ops:
+            base = op.kind.removesuffix("-start").removesuffix("-done")
+            if op.kind == "while":
+                trip = _trip_count(comps, op.called[0] if op.called else "")
+                stats.n_while += 1
+                stats.trip_counts.append(trip)
+                for c in op.called:          # [condition, body]
+                    walk(c, mult * trip, traffic)
+                continue
+            if base in COLLECTIVES:
+                if op.kind.endswith("-done"):
+                    continue                 # counted at -start
+                b = sum(_operand_logical_bytes(comp, o)
+                        for o in op.operands) * mult
+                rs = _reduce_scatterable(comp, op)
+                if rs:
+                    # every consumer immediately slices the result to a
+                    # shard (SP residual): XLA:TPU's ReduceScatterCreator
+                    # turns this all-reduce into a reduce-scatter whose
+                    # per-device bytes ~ 2 x shard
+                    b = min(b, 2.0 * rs * mult)
+                stats.collective_bytes += b
+                stats.collective_by_type[base] = \
+                    stats.collective_by_type.get(base, 0.0) + b
+                stats.collective_count[base] = \
+                    stats.collective_count.get(base, 0) + int(mult)
+                mname = re.search(r'op_name="([^"]+)"', op.line)
+                m = _SHAPE_RE.search(op.type_str)
+                site = (f"{base}:{m.group(0) if m else '?'}:"
+                        + (mname.group(1)[-70:] if mname else "?"))
+                stats.collective_by_site[site] = \
+                    stats.collective_by_site.get(site, 0.0) + b
+            if op.kind == "dot":
+                stats.flops += _dot_flops(comp, op) * mult
+            if traffic and op.kind not in _NO_TRAFFIC:
+                b = op_bytes(comp, op) * mult
+                stats.traffic_bytes += b
+                if _is_materialization(op):
+                    stats.traffic_fused_bytes += b
+                    m = _SHAPE_RE.search(op.type_str)
+                    sig = (f"{op.kind}:{m.group(0) if m else '?'}")
+                    stats.traffic_by_sig[sig] = \
+                        stats.traffic_by_sig.get(sig, 0.0) + b
+            if op.kind in ("fusion", "reduce", "map", "scatter", "sort",
+                           "reduce-window", "select-and-scatter"):
+                # descend for dot flops only (no traffic double-count)
+                for c in op.called:
+                    walk(c, mult, traffic=False)
+            elif op.kind in ("call", "conditional", "custom-call"):
+                for c in op.called:
+                    walk(c, mult, traffic=traffic)
+        visiting.discard(comp_name)
+
+    walk(entry, 1.0, traffic=True)
+    return stats

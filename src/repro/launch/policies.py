@@ -1,0 +1,51 @@
+"""Tuned per-(arch x shape) launch policies — the §Perf conclusions as
+code (EXPERIMENTS.md §Perf scoreboard).
+
+    from repro.launch.policies import tuned_options
+    opts = tuned_options("granite-34b", "train_4k")
+    lower_cell(arch, shape, multi_pod, **opts)
+
+Policy rules (derived, not hand-waved — every rule cites its §Perf
+iteration):
+  - small models (total params <= ~3.5B) on a 256-chip pod: DP-only
+    remap + FSDP (D-series: 1.9-12x roofline fraction);
+  - deep/huge dense (params bf16 x 2 > HBM budget after TP): FSDP (C1);
+  - gemma3-class dense: accum 4 (B4) — accum 8 default otherwise
+    (HBM-safety first);
+  - SP activation sharding always on for TP cells (B1 refuted dropping
+    it); irrelevant under dp_only;
+  - mamba archs keep the unfused jnp scan until the Pallas kernel path
+    is active on real TPUs (A-series: jnp-level fusion is neutral).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import get_config
+
+DP_ONLY_MAX_PARAMS = 3.5e9
+
+
+def tuned_options(arch: str, shape_name: str) -> Dict:
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    opts: Dict = {"q_chunk": 1024, "zero1": True, "remat": True,
+                  "seq_shard": True, "accum_steps": 8,
+                  "fsdp": False, "dp_only": False, "accum_bf16": False}
+    if shape_name != "train_4k":
+        opts["accum_steps"] = 1
+        if shape_name.startswith("decode") or shape_name.startswith("long"):
+            # §Perf/F: int8 KV cache — 2.6-3.5x off the decode memory
+            # term, greedy tokens unchanged (test_int8_kv_decode...)
+            opts["kv_quant"] = True
+        return opts
+    if n <= DP_ONLY_MAX_PARAMS:
+        opts.update(dp_only=True, fsdp=True, accum_steps=1,
+                    seq_shard=False)
+        return opts
+    if arch == "granite-34b":
+        opts.update(fsdp=True)                      # C1/C3
+    if arch in ("gemma3-27b", "internvl2-26b"):
+        opts.update(accum_steps=4)                  # B4 / E2 (+5-6%)
+    # glm4-9b probed flat on accum 4 (E1: +0.5%) — stays at the default
+    return opts

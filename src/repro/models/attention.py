@@ -1,0 +1,216 @@
+"""GQA attention: full/sliding-window, train/prefill and cached decode.
+
+Design notes (TPU adaptation):
+- The reference path is pure jnp with optional *query chunking* (a lazy
+  flash-attention: ``lax.scan`` over query blocks so the (S, T) score matrix
+  never materialises beyond one block — this is what makes the 32k-prefill
+  dry-run fit in HBM).  The Pallas kernel in ``repro.kernels.flash_attention``
+  implements the same math with explicit VMEM tiling and is validated against
+  this path; dry-runs lower the jnp path (Pallas cannot lower on the CPU
+  backend except in interpret mode).
+- KV is stored un-repeated (n_kv heads); query-head replication is a gather
+  that XLA shards along the head axis when divisible (see
+  ``parallel/sharding.py`` for the head-sharding rules).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rms_norm, rope_angles
+
+NEG_INF = -2.0e38
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array            # (d, H*hd)
+    wk: jax.Array            # (d, K*hd)
+    wv: jax.Array            # (d, K*hd)
+    wo: jax.Array            # (H*hd, d)
+    q_norm: Optional[jax.Array]   # (hd,) or None
+    k_norm: Optional[jax.Array]
+
+
+def _project_qkv(p: AttnParams, x, n_heads, n_kv, head_dim, sin, cos,
+                 eps: float):
+    B, S, _ = x.shape
+    q = (x @ p.wq).reshape(B, S, n_heads, head_dim)
+    k = (x @ p.wk).reshape(B, S, n_kv, head_dim)
+    v = (x @ p.wv).reshape(B, S, n_kv, head_dim)
+    if p.q_norm is not None:
+        q = rms_norm(q, p.q_norm, eps)
+        k = rms_norm(k, p.k_norm, eps)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, K, G, hd): group query heads per kv head.
+
+    Grouped einsums read the UN-repeated kv tensors directly — a
+    ``jnp.repeat`` of a 32k-token cache would materialise a cache-sized
+    temp per layer."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+def _scores_mask(q_pos, k_pos, window, is_global):
+    """Causal (+ optional sliding window) additive mask.
+
+    q_pos: (S,) or (B, 1); k_pos: (T,). ``is_global`` may be a traced bool —
+    local/global layer heterogeneity inside scan-over-layers is a cheap
+    ``where`` on the mask rather than a ``lax.cond``.
+    """
+    causal = k_pos[None, :] <= q_pos[..., None]
+    if window:
+        in_win = k_pos[None, :] > (q_pos[..., None] - window)
+        keep = causal & (is_global | in_win)
+    else:
+        keep = causal
+    return jnp.where(keep, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """Grouped SDPA. q: (B, Sq, K, G, hd); k/v: (B, T, K, hd);
+    mask: (Sq, T) additive. Returns (B, Sq, K, G, hd)."""
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = logits + mask                      # broadcast over (B, K, G)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+
+def attention(p: AttnParams, x, *, cfg_heads, positions, theta,
+              window: int, is_global, eps: float,
+              q_chunk: int = 0, return_kv: bool = False):
+    """Full-sequence attention (train / prefill).
+
+    cfg_heads: (n_heads, n_kv, head_dim).  ``q_chunk`` > 0 scans over query
+    blocks (lazy-flash) to bound the score-matrix footprint.
+    Returns (out, (k, v) if return_kv else None).
+    """
+    H, K, hd = cfg_heads
+    B, S, _ = x.shape
+    sin, cos = rope_angles(positions, hd, theta)
+    q, k, v = _project_qkv(p, x, H, K, hd, sin, cos, eps)
+    scale = hd ** -0.5
+    qg = _group_q(q, K)                         # (B, S, K, G, hd)
+    k_pos = positions
+
+    if q_chunk and S > q_chunk and S % q_chunk == 0:
+        n_blk = S // q_chunk
+
+        def blk(carry, inp):
+            qb, qpos = inp                      # (B, C, K, G, hd), (C,)
+            mask = _scores_mask(qpos, k_pos, window, is_global)
+            ob = _sdpa(qb, k, v, mask, scale)
+            return carry, ob
+
+        q_blocks = qg.reshape(B, n_blk, q_chunk, K, H // K, hd
+                              ).swapaxes(0, 1)
+        pos_blocks = positions.reshape(n_blk, q_chunk)
+        _, out_blocks = jax.lax.scan(blk, None, (q_blocks, pos_blocks))
+        out = out_blocks.swapaxes(0, 1).reshape(B, S, H * hd)
+    else:
+        mask = _scores_mask(positions, k_pos, window, is_global)
+        out = _sdpa(qg, k, v, mask, scale).reshape(B, S, H * hd)
+
+    out = out @ p.wo
+    return out, ((k, v) if return_kv else None)
+
+
+def quantize_kv(x: jax.Array):
+    """Symmetric int8 per-(token, head) KV quantization.
+
+    x: (..., hd) -> (int8 (..., hd), scale (...,) bf16).  Halving the
+    cache dtype halves both the decode state and the bandwidth-bound
+    cache read (EXPERIMENTS.md §Perf/F)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def decode_attention_quant(p: AttnParams, x, k_cache, v_cache, k_scale,
+                           v_scale, *, cfg_heads, pos, theta, window: int,
+                           is_global, eps: float):
+    """Cached decode over an int8-quantized KV cache.
+
+    k_cache/v_cache: int8 (B, T, K, hd); k_scale/v_scale: bf16 (B, T, K).
+    Dequantization happens inside the attention math (per-tile on TPU),
+    so the HBM stream stays int8.
+    """
+    H, K, hd = cfg_heads
+    B = x.shape[0]
+    T = k_cache.shape[1]
+    sin, cos = rope_angles(pos[:, None], hd, theta)
+    q, k_new, v_new = _project_qkv(p, x, H, K, hd, sin, cos, eps)
+
+    kq, ks = quantize_kv(k_new[:, 0])                    # (B,K,hd),(B,K)
+    vq, vs = quantize_kv(v_new[:, 0])
+    bidx = jnp.arange(B, dtype=jnp.int32)
+    k_cache = k_cache.at[bidx, pos].set(kq)
+    v_cache = v_cache.at[bidx, pos].set(vq)
+    k_scale = k_scale.at[bidx, pos].set(ks)
+    v_scale = v_scale.at[bidx, pos].set(vs)
+
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    valid = k_pos[None, :] <= pos[:, None]
+    if window:
+        in_win = k_pos[None, :] > (pos[:, None] - window)
+        valid = valid & (is_global | in_win)
+    mask = jnp.where(valid, 0.0, NEG_INF)                # (B, T)
+
+    qg = _group_q(q, K)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k_cache.astype(qg.dtype),
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    logits = logits * k_scale.astype(jnp.float32).transpose(0, 2, 1)[
+        :, :, None, None, :]
+    logits = logits + mask[:, None, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    pv = (probs * v_scale.astype(jnp.float32).transpose(0, 2, 1)[
+        :, :, None, None, :]).astype(qg.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", pv,
+                     v_cache.astype(qg.dtype)).reshape(B, 1, H * hd)
+    return out @ p.wo, (k_cache, v_cache, k_scale, v_scale)
+
+
+def decode_attention(p: AttnParams, x, k_cache, v_cache, *, cfg_heads,
+                     pos, theta, window: int, is_global, eps: float):
+    """One-token cached decode.
+
+    x: (B, 1, d); k_cache/v_cache: (B, T, K, hd) with the new slot at
+    ``pos`` (B,) int32.  Returns (out (B,1,d), k_cache', v_cache').
+    """
+    H, K, hd = cfg_heads
+    B, _, _ = x.shape
+    T = k_cache.shape[1]
+    sin, cos = rope_angles(pos[:, None], hd, theta)      # (B,1,hd/2)
+    q, k_new, v_new = _project_qkv(p, x, H, K, hd, sin, cos, eps)
+
+    # scatter the new kv into slot `pos` (per-sequence index) — an
+    # in-place donated update, not a one-hot blend (which would build two
+    # cache-sized temporaries per layer)
+    bidx = jnp.arange(B, dtype=jnp.int32)
+    k_cache = k_cache.at[bidx, pos].set(k_new[:, 0])
+    v_cache = v_cache.at[bidx, pos].set(v_new[:, 0])
+
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    valid = k_pos[None, :] <= pos[:, None]                         # (B, T)
+    if window:
+        in_win = k_pos[None, :] > (pos[:, None] - window)
+        valid = valid & (is_global | in_win)
+    mask = jnp.where(valid, 0.0, NEG_INF)                          # (B, T)
+
+    qg = _group_q(q, K)                                  # (B, 1, K, G, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    logits = logits + mask[:, None, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache
+                     ).reshape(B, 1, H * hd)
+    return out @ p.wo, k_cache, v_cache

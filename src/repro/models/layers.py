@@ -1,0 +1,89 @@
+"""Shared model layers: norms, RoPE, SwiGLU, embeddings, init helpers.
+
+Pure-functional: parameters are plain pytrees (dicts of jnp arrays); every
+layer is a function ``f(params, x, ...) -> y``.  Mixed precision convention:
+parameters are stored in ``param_dtype`` (bf16 for the large configs), all
+reductions (norms, softmax, loss) run in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: Optional[jax.Array], eps: float = 1e-6,
+             zero_centered: bool = False) -> jax.Array:
+    """RMSNorm in fp32, cast back to the input dtype.
+
+    ``weight=None`` gives the weightless norm used for falcon-mamba's
+    dt/B/C stabilisation. ``zero_centered`` uses the (1+w) gemma convention.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        w = weight.astype(jnp.float32)
+        xf = xf * (1.0 + w) if zero_centered else xf * w
+    return xf.astype(dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta) -> tuple:
+    """sin/cos tables for rotary embeddings.
+
+    positions: integer array (...,); returns sin, cos of shape (..., hd/2).
+    ``theta`` may be a traced scalar (per-layer theta inside scan).
+    """
+    half = head_dim // 2
+    freq_exp = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.asarray(theta, jnp.float32) ** (-freq_exp)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Rotate-half RoPE. x: (..., n_heads, head_dim); sin/cos: (..., hd/2)
+    broadcastable against x's leading dims (a heads axis is inserted)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s, c = sin[..., None, :], cos[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (silu(x@w1) * (x@w3)) @ w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Embedding lookup; vocab padding rows are reachable only if the data
+    pipeline emits padded ids (it does not)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def pad_to(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+# ----------------------------------------------------------------------
+# Initializers (explicitly keyed; counter-based so init is reproducible
+# regardless of device count — the "deterministic lineage" requirement)
+# ----------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype, std: float = 0.02):
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)

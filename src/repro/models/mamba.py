@@ -1,0 +1,196 @@
+"""Mamba-1 mixer: gated selective state-space block, TPU-adapted.
+
+TPU adaptation (see DESIGN.md §8): the CUDA mamba kernel is a fused
+sequential scan over time held in SRAM.  On TPU we *chunk* the sequence:
+an outer ``lax.scan`` carries the (B, d_inner, d_state) state across chunks
+while an inner ``associative_scan`` parallelises within the chunk — this
+keeps the MXU/VPU busy on (chunk, d_inner) tiles instead of serialising
+4096 tiny steps, and bounds live memory to one chunk of (B, c, dI, dS).
+The Pallas kernel in ``repro.kernels.selective_scan`` implements the same
+chunking with explicit VMEM residency of the state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+class MambaParams(NamedTuple):
+    in_proj: jax.Array      # (d, 2*dI)  -> x, z
+    conv_w: jax.Array       # (dc, dI)   depthwise causal conv
+    conv_b: jax.Array       # (dI,)
+    x_proj: jax.Array       # (dI, dtr + 2*dS)
+    dt_proj: jax.Array      # (dtr, dI)
+    dt_bias: jax.Array      # (dI,)
+    A_log: jax.Array        # (dI, dS)
+    D: jax.Array            # (dI,)
+    out_proj: jax.Array     # (dI, d)
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array         # (B, dc-1, dI) last inputs for the causal conv
+    ssm: jax.Array          # (B, dI, dS)
+
+
+def _ssm_coeffs(p: MambaParams, xc, dt_rank, d_state, dt_bc_norm, eps):
+    """xc: (B, L, dI) post-conv activations -> dt (B,L,dI), B/C (B,L,dS)."""
+    proj = xc @ p.x_proj
+    dt, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    if dt_bc_norm:  # falcon-mamba stabilisation: weightless RMSNorm
+        dt = rms_norm(dt, None, eps)
+        Bmat = rms_norm(Bmat, None, eps)
+        Cmat = rms_norm(Cmat, None, eps)
+    dt = jax.nn.softplus(dt @ p.dt_proj + p.dt_bias)     # (B, L, dI)
+    return dt, Bmat, Cmat
+
+
+def _discretize(p: MambaParams, dt, Bmat, x):
+    """a = exp(dt*A): (B,L,dI,dS); b = dt*B*x: (B,L,dI,dS)."""
+    A = -jnp.exp(p.A_log.astype(jnp.float32))            # (dI, dS)
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)   # (B, L, dI, dS)
+    b = (dt * x).astype(jnp.float32)[..., None] * \
+        Bmat.astype(jnp.float32)[:, :, None, :]          # (B, L, dI, dS)
+    return a, b
+
+
+def _chunk_scan(a, b, C, h0, chunk):
+    """Selective scan h_t = a_t*h_{t-1} + b_t, emitting y_t = <h_t, C_t>.
+
+    a, b: (B, L, dI, dS) fp32; C: (B, L, dS) fp32; h0: (B, dI, dS).
+    Returns (y (B, L, dI) fp32, h_last).  The (B, L, dI, dS) state history
+    is never materialised beyond one chunk: the outer ``lax.scan`` carries
+    the state across chunks, the inner ``associative_scan`` parallelises
+    within a chunk, and the C-projection is fused into the chunk body.
+    """
+    B, L, dI, dS = a.shape
+    n = max(L // chunk, 1)
+    chunk = L // n
+    a_c = a.reshape(B, n, chunk, dI, dS).swapaxes(0, 1)
+    b_c = b.reshape(B, n, chunk, dI, dS).swapaxes(0, 1)
+    c_c = C.reshape(B, n, chunk, dS).swapaxes(0, 1)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+
+    def outer(h, abc):
+        ac, bc, cc = abc                                # chunk slabs
+        a_run, b_run = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = a_run * h[:, None] + b_run              # (B, chunk, dI, dS)
+        yc = jnp.einsum("blds,bls->bld", h_all, cc)
+        return h_all[:, -1], yc
+
+    h_last, y_chunks = jax.lax.scan(outer, h0, (a_c, b_c, c_c))
+    y = y_chunks.swapaxes(0, 1).reshape(B, L, dI)
+    return y, h_last
+
+
+def _chunk_scan_fused(p: MambaParams, dt, Bmat, C, xc, h0, chunk):
+    """Chunked scan with in-body discretisation (a/b never hit HBM).
+
+    dt, xc: (B, L, dI); Bmat: (B, L, dS); C: (B, L, dS) f32.
+    Returns (y (B, L, dI) f32, h_last).
+    """
+    B, L, dI = dt.shape
+    dS = Bmat.shape[-1]
+    n = max(L // chunk, 1)
+    chunk = L // n
+    A = -jnp.exp(p.A_log.astype(jnp.float32))            # (dI, dS)
+
+    slab = lambda t: t.reshape((B, n, chunk) + t.shape[2:]).swapaxes(0, 1)
+    dt_c, x_c, b_c, c_c = slab(dt), slab(xc), slab(Bmat), slab(C)
+
+    def combine(u, v):
+        au, bu = u
+        av, bv = v
+        return au * av, bu * av + bv
+
+    def outer(h, xs):
+        dtc, xcc, bc, cc = xs
+        dtf = dtc.astype(jnp.float32)[..., None]          # (B, c, dI, 1)
+        a = jnp.exp(dtf * A)                              # (B, c, dI, dS)
+        b = (dtf * xcc.astype(jnp.float32)[..., None]) * \
+            bc.astype(jnp.float32)[:, :, None, :]
+        a_run, b_run = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = a_run * h[:, None] + b_run
+        yc = jnp.einsum("blds,bls->bld", h_all, cc)
+        return h_all[:, -1], yc
+
+    h_last, y_chunks = jax.lax.scan(outer, h0, (dt_c, x_c, b_c, c_c))
+    return y_chunks.swapaxes(0, 1).reshape(B, L, dI), h_last
+
+
+def mamba_mixer(p: MambaParams, x, *, d_inner, d_state, dt_rank, d_conv,
+                chunk, dt_bc_norm: bool = False, eps: float = 1e-6,
+                return_state: bool = False,
+                init_state: Optional[MambaState] = None,
+                fused: bool = False):
+    """Full-sequence mamba mixer. x: (B, L, d) -> (B, L, d)."""
+    B, L, _ = x.shape
+    xz = x @ p.in_proj
+    xs, z = jnp.split(xz, 2, axis=-1)                    # (B, L, dI)
+
+    # causal depthwise conv (kernel dc) along L
+    if init_state is not None:
+        pad = init_state.conv
+    else:
+        pad = jnp.zeros((B, d_conv - 1, d_inner), xs.dtype)
+    xpad = jnp.concatenate([pad, xs], axis=1)
+    xc = sum(xpad[:, i:i + L] * p.conv_w[i][None, None, :]
+             for i in range(d_conv))
+    xc = jax.nn.silu(xc + p.conv_b)
+
+    dt, Bmat, Cmat = _ssm_coeffs(p, xc, dt_rank, d_state, dt_bc_norm, eps)
+    h0 = (init_state.ssm.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B, d_inner, d_state), jnp.float32))
+    if fused:
+        # beyond-baseline (§Perf): discretisation happens inside the chunk
+        # body, so the (B, L, dI, dS) a/b tensors never materialise in
+        # HBM — only the dS-times-smaller dt/B/C/x slabs stream in.  The
+        # Pallas kernel realises the same fusion on TPU.
+        y, h_last = _chunk_scan_fused(p, dt, Bmat,
+                                      Cmat.astype(jnp.float32), xc, h0,
+                                      chunk)
+    else:
+        a, b = _discretize(p, dt, Bmat, xc)
+        y, h_last = _chunk_scan(a, b, Cmat.astype(jnp.float32), h0, chunk)
+    y = y.astype(x.dtype) + xc * p.D
+    y = y * jax.nn.silu(z)
+    out = y @ p.out_proj
+    if return_state:
+        new_conv = xpad[:, L:L + d_conv - 1] if L >= d_conv - 1 else \
+            jnp.concatenate([pad, xs], axis=1)[:, -(d_conv - 1):]
+        return out, MambaState(conv=new_conv, ssm=h_last.astype(jnp.float32))
+    return out, None
+
+
+def mamba_decode(p: MambaParams, x, state: MambaState, *, d_inner, d_state,
+                 dt_rank, d_conv, dt_bc_norm: bool = False,
+                 eps: float = 1e-6) -> Tuple[jax.Array, MambaState]:
+    """Single-token decode. x: (B, 1, d); O(1) state update."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p.in_proj
+    xs, z = jnp.split(xz, 2, axis=-1)                    # (B, dI)
+
+    window = jnp.concatenate([state.conv, xs[:, None]], axis=1)  # (B, dc, dI)
+    xc = jnp.einsum("bcd,cd->bd", window, p.conv_w)
+    xc = jax.nn.silu(xc + p.conv_b)
+
+    dt, Bmat, Cmat = _ssm_coeffs(p, xc[:, None], dt_rank, d_state,
+                                 dt_bc_norm, eps)
+    dt, Bmat, Cmat = dt[:, 0], Bmat[:, 0], Cmat[:, 0]
+    A = -jnp.exp(p.A_log.astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)          # (B, dI, dS)
+    b = (dt * xc).astype(jnp.float32)[..., None] * \
+        Bmat.astype(jnp.float32)[:, None, :]
+    h = a * state.ssm + b
+    y = jnp.einsum("bds,bs->bd", h, Cmat.astype(jnp.float32)).astype(x.dtype)
+    y = y + xc * p.D
+    y = y * jax.nn.silu(z)
+    out = (y @ p.out_proj)[:, None]
+    return out, MambaState(conv=window[:, 1:], ssm=h)

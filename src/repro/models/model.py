@@ -1,0 +1,491 @@
+"""The LM: parameter init, train forward, prefill, and cached decode.
+
+Structure: every layer of a given arch is structurally homogeneous (the
+local/global attention heterogeneity of gemma3/hymba is a *traced* mask
+switch, not a structural one), so the layer stack is a single
+``lax.scan`` over stacked (L, ...) parameters — this keeps the HLO (and
+compile time) O(1) in depth, which is what makes 88-layer dry-runs at 512
+devices tractable.  Remat ("MEMORY_ONLY" persistence in the paper's terms)
+wraps the scan body.
+
+All functions are pure; parameters are nested dicts of arrays so the
+sharding rules in ``parallel/sharding.py`` can address leaves by path.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (LAYER_GLOBAL, LAYER_HYBRID, LAYER_LOCAL,
+                                LAYER_MAMBA, ModelConfig)
+from repro.models import moe as moe_lib
+from repro.models.attention import (AttnParams, attention,
+                                    decode_attention,
+                                    decode_attention_quant)
+from repro.models.layers import embed_init, embed_lookup, pad_to, rms_norm, swiglu
+from repro.models.mamba import MambaParams, MambaState, mamba_decode, mamba_mixer
+from repro.parallel.sharding import MeshRules
+
+Params = Dict[str, Any]
+
+VOCAB_PAD_MULTIPLE = 256
+DEFAULT_Q_CHUNK = 1024       # lazy-flash threshold: chunk queries if S > this
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    return pad_to(cfg.vocab_size, VOCAB_PAD_MULTIPLE)
+
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+
+def _init(key, shape, fan_in, dtype, scale=1.0):
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=jnp.bfloat16) -> Params:
+    """Build the full parameter pytree (stacked layers).
+
+    Deterministic in ``key`` alone (counter-based fold_in per leaf), so a
+    restored-elsewhere replica re-derives identical params — the lineage
+    property DESIGN.md §2 relies on.
+    """
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    V = vocab_padded(cfg)
+    kinds = cfg.layer_kinds
+    out_scale = 1.0 / math.sqrt(2 * L)
+
+    def k(*names):
+        kk = key
+        for n in names:
+            kk = jax.random.fold_in(kk, hash(n) % (2 ** 31))
+        return kk
+
+    params: Params = {}
+    params["embed"] = embed_init(k("embed"), (V, d), dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = _init(k("head"), (d, V), d, dtype)
+    params["final_norm"] = jnp.ones((d,), dtype)
+
+    layers: Params = {"ln1": jnp.ones((L, d), dtype)}
+    has_attn = any(kd in (LAYER_GLOBAL, LAYER_LOCAL, LAYER_HYBRID)
+                   for kd in kinds)
+    has_mamba = any(kd in (LAYER_MAMBA, LAYER_HYBRID) for kd in kinds)
+    has_ffn = kinds[0] != LAYER_MAMBA
+
+    if has_attn:
+        H, K = cfg.n_heads, cfg.n_kv_heads
+        layers["attn"] = AttnParams(
+            wq=_init(k("wq"), (L, d, H * hd), d, dtype),
+            wk=_init(k("wk"), (L, d, K * hd), d, dtype),
+            wv=_init(k("wv"), (L, d, K * hd), d, dtype),
+            wo=_init(k("wo"), (L, H * hd, d), H * hd, dtype, out_scale),
+            q_norm=jnp.ones((L, hd), dtype) if cfg.qk_norm else None,
+            k_norm=jnp.ones((L, hd), dtype) if cfg.qk_norm else None,
+        )
+    if has_mamba:
+        s = cfg.ssm
+        dI = s.expand * d
+        dtr = s.resolved_dt_rank(d)
+        dt_init = jnp.log(jnp.expm1(jnp.exp(
+            jax.random.uniform(k("dt"), (L, dI), jnp.float32)
+            * (math.log(0.1) - math.log(0.001)) + math.log(0.001))))
+        layers["mamba"] = MambaParams(
+            in_proj=_init(k("m_in"), (L, d, 2 * dI), d, dtype),
+            conv_w=_init(k("m_conv"), (L, s.d_conv, dI), s.d_conv, dtype),
+            conv_b=jnp.zeros((L, dI), dtype),
+            x_proj=_init(k("m_x"), (L, dI, dtr + 2 * s.d_state), dI, dtype),
+            dt_proj=_init(k("m_dt"), (L, dtr, dI), dtr, dtype),
+            dt_bias=dt_init.astype(dtype),
+            A_log=jnp.log(jnp.broadcast_to(
+                jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                (L, dI, s.d_state))).astype(jnp.float32),
+            D=jnp.ones((L, dI), dtype),
+            out_proj=_init(k("m_out"), (L, dI, d), dI, dtype, out_scale),
+        )
+    if kinds[0] == LAYER_HYBRID:
+        layers["attn_out_norm"] = jnp.ones((L, d), dtype)
+        layers["mamba_out_norm"] = jnp.ones((L, d), dtype)
+    if has_ffn:
+        layers["ln2"] = jnp.ones((L, d), dtype)
+        if cfg.moe.enabled:
+            tp_pad = 16  # pad for the production model-axis size
+            E = moe_lib.padded_experts(cfg.moe.n_experts, tp_pad)
+            f = cfg.d_ff
+            nsh = cfg.moe.n_shared_experts
+            layers["ffn"] = moe_lib.MoEParams(
+                router=_init(k("router"), (L, d, E), d, jnp.float32),
+                we1=_init(k("we1"), (L, E, d, f), d, dtype),
+                we3=_init(k("we3"), (L, E, d, f), d, dtype),
+                we2=_init(k("we2"), (L, E, f, d), f, dtype, out_scale),
+                ws1=_init(k("ws1"), (L, d, nsh * f), d, dtype) if nsh else None,
+                ws3=_init(k("ws3"), (L, d, nsh * f), d, dtype) if nsh else None,
+                ws2=_init(k("ws2"), (L, nsh * f, d), nsh * f, dtype,
+                          out_scale) if nsh else None,
+            )
+        else:
+            layers["ffn"] = {
+                "w1": _init(k("w1"), (L, d, cfg.d_ff), d, dtype),
+                "w3": _init(k("w3"), (L, d, cfg.d_ff), d, dtype),
+                "w2": _init(k("w2"), (L, cfg.d_ff, d), cfg.d_ff, dtype,
+                            out_scale),
+            }
+    params["layers"] = layers
+    return params
+
+
+def layer_meta(cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Per-layer traced metadata consumed by the scan body."""
+    kinds = cfg.layer_kinds
+    flags = [kd in (LAYER_GLOBAL, LAYER_MAMBA) or
+             (kd == LAYER_HYBRID and i in cfg.global_layers)
+             for i, kd in enumerate(kinds)]
+    theta_g = cfg.rope_theta
+    theta_l = cfg.rope_theta_local or cfg.rope_theta
+    theta = [theta_g if g else theta_l for g in flags]
+    return {"is_global": jnp.array(flags, jnp.bool_),
+            "theta": jnp.array(theta, jnp.float32)}
+
+
+# ----------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------
+
+def _ffn_apply(lp, x, cfg: ModelConfig, rules: MeshRules):
+    """FFN sub-block on (B, S, d); returns (out, aux_loss)."""
+    B, S, d = x.shape
+    if not cfg.moe.enabled:
+        f = lp["ffn"]
+        h = jax.nn.silu(x @ f["w1"]) * (x @ f["w3"])
+        h = rules.cs(h, jax.sharding.PartitionSpec(
+            rules.dp if rules.dp else None, None, rules.t_ax))
+        return h @ f["w2"], jnp.float32(0)
+    p: moe_lib.MoEParams = lp["ffn"]
+    tokens = x.reshape(B * S, d)
+    if rules.mesh is None:
+        out, aux = moe_lib.moe_ffn(p, tokens, cfg.moe, tp_size=1,
+                                   axis_name=None,
+                                   n_real_experts=cfg.moe.n_experts)
+        return out.reshape(B, S, d), aux
+    if rules.dp_only:
+        # DP-only remap (§Perf/D): experts replicated, tokens sharded
+        # over every mesh axis — routing and expert FFNs are local
+        from jax.sharding import PartitionSpec as P
+        dp = rules.dp
+
+        def local_fn(tok, router, we1, we3, we2, ws1, ws3, ws2):
+            pp = moe_lib.MoEParams(router, we1, we3, we2, ws1, ws3, ws2)
+            return moe_lib.moe_ffn(pp, tok, cfg.moe, tp_size=1,
+                                   axis_name=None, dp_axes=dp,
+                                   n_real_experts=cfg.moe.n_experts)
+
+        rep = lambda a: None if a is None else P(*([None] * a.ndim))
+        in_specs = (P(dp, None), rep(p.router), rep(p.we1), rep(p.we3),
+                    rep(p.we2), rep(p.ws1), rep(p.ws3), rep(p.ws2))
+        out, aux = jax.shard_map(
+            local_fn, mesh=rules.mesh, in_specs=in_specs,
+            out_specs=(P(dp, None), P()), check_vma=False)(
+            tokens, p.router, p.we1, p.we3, p.we2, p.ws1, p.ws3, p.ws2)
+        return out.reshape(B, S, d), aux
+
+    from jax.sharding import PartitionSpec as P
+    mesh = rules.mesh
+    dp = rules.dp
+    t = rules.tp_axis
+    tp = rules.tp
+
+    def local_fn(tok, router, we1, we3, we2, ws1, ws3, ws2):
+        pp = moe_lib.MoEParams(router, we1, we3, we2, ws1, ws3, ws2)
+        return moe_lib.moe_ffn(pp, tok, cfg.moe, tp_size=tp, axis_name=t,
+                               dp_axes=dp,
+                               n_real_experts=cfg.moe.n_experts)
+
+    in_specs = (P(dp, None),                 # tokens: rows over dp
+                P(None, None),               # router replicated
+                P(t, None, None), P(t, None, None), P(t, None, None),
+                P(None, t) if p.ws1 is not None else None,
+                P(None, t) if p.ws3 is not None else None,
+                P(t, None) if p.ws2 is not None else None)
+    out_specs = (P(dp, None), P())
+    out, aux = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(tokens, p.router, p.we1, p.we3, p.we2,
+                         p.ws1, p.ws3, p.ws2)
+    return out.reshape(B, S, d), aux
+
+
+def block_forward(x, lp, meta, cfg: ModelConfig, rules: MeshRules, *,
+                  positions, q_chunk, return_kv=False, return_state=False,
+                  init_state: Optional[MambaState] = None):
+    """One layer, full-sequence. Returns (x, (kv, mamba_state), aux)."""
+    kind = cfg.layer_kinds[0]   # structural kind (homogeneous per arch)
+    hd = cfg.resolved_head_dim
+    heads = (cfg.n_heads, cfg.n_kv_heads, hd)
+    eps = cfg.norm_eps
+    aspec = rules.act_spec(cfg)
+    kv = state = None
+    aux = jnp.float32(0)
+
+    h = rms_norm(x, lp["ln1"], eps)
+    if kind in (LAYER_GLOBAL, LAYER_LOCAL):
+        out, kv = attention(
+            lp["attn"], h, cfg_heads=heads, positions=positions,
+            theta=meta["theta"], window=cfg.sliding_window,
+            is_global=meta["is_global"], eps=eps, q_chunk=q_chunk,
+            return_kv=return_kv)
+        x = x + rules.cs(out, aspec)
+    elif kind == LAYER_MAMBA:
+        s = cfg.ssm
+        out, state = mamba_mixer(
+            lp["mamba"], h, d_inner=s.expand * cfg.d_model,
+            d_state=s.d_state, dt_rank=s.resolved_dt_rank(cfg.d_model),
+            d_conv=s.d_conv, chunk=s.chunk, dt_bc_norm=True, eps=eps,
+            return_state=return_state, init_state=init_state,
+            fused=s.fused)
+        x = x + rules.cs(out, aspec)
+    elif kind == LAYER_HYBRID:
+        a_out, kv = attention(
+            lp["attn"], h, cfg_heads=heads, positions=positions,
+            theta=meta["theta"], window=cfg.sliding_window,
+            is_global=meta["is_global"], eps=eps, q_chunk=q_chunk,
+            return_kv=return_kv)
+        s = cfg.ssm
+        m_out, state = mamba_mixer(
+            lp["mamba"], h, d_inner=s.expand * cfg.d_model,
+            d_state=s.d_state, dt_rank=s.resolved_dt_rank(cfg.d_model),
+            d_conv=s.d_conv, chunk=s.chunk, eps=eps,
+            return_state=return_state, init_state=init_state,
+            fused=s.fused)
+        fused = 0.5 * (rms_norm(a_out, lp["attn_out_norm"], eps) +
+                       rms_norm(m_out, lp["mamba_out_norm"], eps))
+        x = x + rules.cs(fused, aspec)
+
+    if kind != LAYER_MAMBA:
+        h2 = rms_norm(x, lp["ln2"], eps)
+        f_out, aux = _ffn_apply(lp, h2, cfg, rules)
+        x = x + rules.cs(f_out, aspec)
+    return x, (kv, state), aux
+
+
+# ----------------------------------------------------------------------
+# Full-model passes
+# ----------------------------------------------------------------------
+
+def _inputs_to_x(params, cfg, batch):
+    if cfg.frontend == "embed":
+        return batch["embeds"]
+    return embed_lookup(params["embed"], batch["tokens"])
+
+
+def forward(params: Params, batch, cfg: ModelConfig, rules: MeshRules, *,
+            remat: bool = True, q_chunk: int = DEFAULT_Q_CHUNK,
+            collect_cache: bool = False):
+    """Full forward pass over (B, S). Returns (hidden, cache|None, aux)."""
+    x = _inputs_to_x(params, cfg, batch)
+    B, S, _ = x.shape
+    x = rules.cs(x, rules.act_spec(cfg))
+    positions = jnp.arange(S, dtype=jnp.int32)
+    meta = layer_meta(cfg)
+
+    def body(carry, xs):
+        lp, m = xs
+        y, (kv, state), aux = block_forward(
+            carry, lp, m, cfg, rules, positions=positions, q_chunk=q_chunk,
+            return_kv=collect_cache and cfg.uses_attention,
+            return_state=collect_cache and cfg.uses_ssm)
+        y = rules.cs(y, rules.act_spec(cfg))
+        return y, (kv, state, aux)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, (kvs, states, auxs) = jax.lax.scan(
+        body_fn, x, (params["layers"], meta))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    cache = None
+    if collect_cache:
+        cache = {}
+        if kvs is not None:
+            cache["k"], cache["v"] = kvs
+        if states is not None:
+            cache["conv"], cache["ssm"] = states.conv, states.ssm
+    return x, cache, jnp.sum(auxs)
+
+
+def lm_loss(params: Params, hidden, labels, cfg: ModelConfig,
+            rules: MeshRules, *, chunk: int = 512):
+    """Chunked cross-entropy: logits materialise one (B, chunk, V) slab at
+    a time (a 262k vocab over 1M tokens would otherwise need ~1 PB)."""
+    from jax.sharding import PartitionSpec as P
+    B, S, d = hidden.shape
+    V = vocab_padded(cfg)
+    head = (params["embed"] if cfg.tie_embeddings else params["head"])
+    vmask = (jnp.arange(V) < cfg.vocab_size)
+    n = max(S // chunk, 1)
+    csize = S // n
+
+    def chunk_nll(carry, xs):
+        h_c, y_c = xs                        # (B, c, d), (B, c)
+        logits = h_c.astype(jnp.float32) @ (
+            head.T if cfg.tie_embeddings else head).astype(jnp.float32)
+        logits = rules.cs(logits, P(rules.dp if rules.dp else None, None,
+                                    rules.t_ax))
+        logits = jnp.where(vmask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    h_chunks = hidden.reshape(B, n, csize, d).swapaxes(0, 1)
+    y_chunks = labels.reshape(B, n, csize).swapaxes(0, 1)
+    total, _ = jax.lax.scan(jax.checkpoint(chunk_nll), jnp.float32(0),
+                            (h_chunks, y_chunks))
+    return total / (B * S)
+
+
+def loss_fn(params, batch, cfg, rules, *, remat=True,
+            q_chunk=DEFAULT_Q_CHUNK, aux_weight=0.01):
+    hidden, _, aux = forward(params, batch, cfg, rules, remat=remat,
+                             q_chunk=q_chunk)
+    nll = lm_loss(params, hidden, batch["labels"], cfg, rules)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ----------------------------------------------------------------------
+# Serving: prefill + decode
+# ----------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, kv_quant: bool = False):
+    """Abstract-or-concrete decode cache for one model.
+
+    ``kv_quant``: int8 cache + bf16 per-(token, head) scales — halves the
+    decode state and the bandwidth-bound cache read (§Perf/F)."""
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    cache = {}
+    if cfg.uses_attention:
+        shape = (L, batch, max_len, cfg.n_kv_heads, hd)
+        kv_dtype = jnp.int8 if kv_quant else dtype
+        cache["k"] = jnp.zeros(shape, kv_dtype)
+        cache["v"] = jnp.zeros(shape, kv_dtype)
+        if kv_quant:
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.bfloat16)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.bfloat16)
+    if cfg.uses_ssm:
+        s = cfg.ssm
+        dI = s.expand * cfg.d_model
+        cache["conv"] = jnp.zeros((L, batch, s.d_conv - 1, dI), dtype)
+        cache["ssm"] = jnp.zeros((L, batch, dI, s.d_state), jnp.float32)
+    return cache
+
+
+def quantize_cache(cache: Dict[str, Any]) -> Dict[str, Any]:
+    """Convert a bf16 prefill cache to the int8 decode layout."""
+    from repro.models.attention import quantize_kv
+    if "k" not in cache or cache["k"].dtype == jnp.int8:
+        return cache
+    out = dict(cache)
+    out["k"], out["k_scale"] = quantize_kv(cache["k"])
+    out["v"], out["v_scale"] = quantize_kv(cache["v"])
+    return out
+
+
+def prefill(params, batch, cfg: ModelConfig, rules: MeshRules, *,
+            q_chunk: int = DEFAULT_Q_CHUNK):
+    """Prefill: returns (last-token logits, cache at positions [0, S))."""
+    hidden, cache, _ = forward(params, batch, cfg, rules, remat=False,
+                               q_chunk=q_chunk, collect_cache=True)
+    last = hidden[:, -1:]
+    logits = _head_logits(params, last, cfg, rules)
+    return logits, cache
+
+
+def _head_logits(params, h, cfg, rules):
+    from jax.sharding import PartitionSpec as P
+    V = vocab_padded(cfg)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
+    logits = rules.cs(logits, P(None, None, rules.t_ax))
+    return jnp.where(jnp.arange(V) < cfg.vocab_size, logits, -1e30)
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, rules: MeshRules):
+    """One decode step.
+
+    batch: {"tokens": (B,1) | "embeds": (B,1,d), "pos": (B,) int32} with
+    ``pos`` the cache slot of the new token.  Returns (logits (B,1,V),
+    new cache).
+    """
+    x = _inputs_to_x(params, cfg, batch)
+    pos = batch["pos"]
+    meta = layer_meta(cfg)
+    hd = cfg.resolved_head_dim
+    heads = (cfg.n_heads, cfg.n_kv_heads, hd)
+    eps = cfg.norm_eps
+    kind = cfg.layer_kinds[0]
+    s = cfg.ssm
+
+    kv_quant = "k_scale" in cache
+
+    def attend(lp, m, h, cache_l, new_cache_l):
+        if kv_quant:
+            out, (k2, v2, ks2, vs2) = decode_attention_quant(
+                lp["attn"], h, cache_l["k"], cache_l["v"],
+                cache_l["k_scale"], cache_l["v_scale"], cfg_heads=heads,
+                pos=pos, theta=m["theta"], window=cfg.sliding_window,
+                is_global=m["is_global"], eps=eps)
+            new_cache_l.update(k=k2, v=v2, k_scale=ks2, v_scale=vs2)
+        else:
+            out, k2, v2 = decode_attention(
+                lp["attn"], h, cache_l["k"], cache_l["v"], cfg_heads=heads,
+                pos=pos, theta=m["theta"], window=cfg.sliding_window,
+                is_global=m["is_global"], eps=eps)
+            new_cache_l.update(k=k2, v=v2)
+        return out
+
+    def body(carry, xs):
+        lp, m, cache_l = xs
+        x = carry
+        new_cache_l = dict(cache_l)
+        h = rms_norm(x, lp["ln1"], eps)
+        if kind in (LAYER_GLOBAL, LAYER_LOCAL):
+            out = attend(lp, m, h, cache_l, new_cache_l)
+            x = x + out
+        elif kind == LAYER_MAMBA:
+            out, st = mamba_decode(
+                lp["mamba"], h, MambaState(cache_l["conv"], cache_l["ssm"]),
+                d_inner=s.expand * cfg.d_model, d_state=s.d_state,
+                dt_rank=s.resolved_dt_rank(cfg.d_model), d_conv=s.d_conv,
+                dt_bc_norm=True, eps=eps)
+            new_cache_l["conv"], new_cache_l["ssm"] = st.conv, st.ssm
+            x = x + out
+        else:  # hybrid
+            a_out = attend(lp, m, h, cache_l, new_cache_l)
+            m_out, st = mamba_decode(
+                lp["mamba"], h, MambaState(cache_l["conv"], cache_l["ssm"]),
+                d_inner=s.expand * cfg.d_model, d_state=s.d_state,
+                dt_rank=s.resolved_dt_rank(cfg.d_model), d_conv=s.d_conv,
+                eps=eps)
+            new_cache_l["conv"], new_cache_l["ssm"] = st.conv, st.ssm
+            fused = 0.5 * (rms_norm(a_out, lp["attn_out_norm"], eps) +
+                           rms_norm(m_out, lp["mamba_out_norm"], eps))
+            x = x + fused
+        if kind != LAYER_MAMBA:
+            h2 = rms_norm(x, lp["ln2"], eps)
+            f_out, _ = _ffn_apply(lp, h2, cfg, rules)
+            x = x + f_out
+        return x, new_cache_l
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], meta, cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(params, x, cfg, rules)
+    return logits, new_cache

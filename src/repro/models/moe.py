@@ -1,0 +1,188 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity buffers, expert parallel.
+
+TPU adaptation (DESIGN.md §7): we do NOT use the GShard one-hot-einsum
+dispatch — its dispatch tensor costs O(T·E·C·d) fake FLOPs that would
+swamp the roofline's useful-compute ratio.  Instead we use *sort-based
+capacity routing*, local to each data shard:
+
+  - routing (router matmul, top-k) is computed where the tokens live;
+  - token->expert assignment is an argsort of (T·k) keys (data movement,
+    not FLOPs) into per-expert capacity buffers;
+  - expert FFNs are dense (E_local, cap, d) batched matmuls — honest FLOPs
+    ~ active_FLOPs * capacity_factor;
+  - experts are sharded over the `model` axis (expert parallelism): each
+    model-rank owns E/tp experts, computes contributions for its experts
+    only, and a single psum over `model` combines (activations are already
+    replicated over `model` at this point, so EP costs one all-reduce that
+    coincides with the tensor-parallel FFN reduction it replaces).
+
+Experts whose count is not divisible by the model-axis size are padded with
+inert experts (router logits masked to -inf); the padding overhead is
+reported by ``padding_ratio`` and accounted in §Roofline.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array        # (d, E_pad)
+    we1: jax.Array           # (E_pad, d, f)
+    we3: jax.Array           # (E_pad, d, f)
+    we2: jax.Array           # (E_pad, f, d)
+    ws1: Optional[jax.Array]  # (d, n_shared*f) or None
+    ws3: Optional[jax.Array]
+    ws2: Optional[jax.Array]  # (n_shared*f, d)
+
+
+def padded_experts(n_experts: int, tp: int) -> int:
+    """Experts padded up to a multiple of the model-axis size."""
+    return ((n_experts + tp - 1) // tp) * tp
+
+
+def padding_ratio(n_experts: int, tp: int) -> float:
+    return padded_experts(n_experts, tp) / n_experts - 1.0
+
+
+def capacity(n_tokens: int, moe: MoEConfig, n_experts_pad: int) -> int:
+    """Static per-expert buffer length (GShard capacity discipline).
+
+    Serving-scale token counts (decode steps) get a drop-free buffer
+    (worst case: every token picks the same expert) — a dropped token in
+    decode corrupts that sequence's output, whereas in training it is a
+    standard regularising approximation."""
+    cap = math.ceil(n_tokens * moe.top_k * moe.capacity_factor
+                    / n_experts_pad)
+    if n_tokens <= 256:
+        cap = max(cap, n_tokens)
+    return max(cap, 1)
+
+
+def route(x, router_w, moe: MoEConfig, n_real_experts: int):
+    """Router: softmax -> top-k -> renormalise.  x: (T, d).
+
+    Returns (weights (T, k), expert_ids (T, k), probs (T, E_pad)) — probs
+    are returned for the load-balancing auxiliary loss.
+    Padded experts are masked to -inf before the softmax.
+    """
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    E_pad = router_w.shape[1]
+    if E_pad > n_real_experts:
+        mask = jnp.arange(E_pad) < n_real_experts
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, moe.top_k)
+    weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-9)
+    return weights.astype(x.dtype), ids, probs
+
+
+def load_balance_parts(probs, ids):
+    """Ingredients of the Switch aux loss: per-expert routed fraction and
+    mean router prob.  Both are token-means, so pmean over equal-sized
+    data shards reproduces the global statistics exactly."""
+    E = probs.shape[-1]
+    onehot = jax.nn.one_hot(ids[..., 0], E, dtype=jnp.float32)
+    return jnp.mean(onehot, axis=0), jnp.mean(probs, axis=0)
+
+
+def load_balance_loss(frac, mean_p, n_real_experts: int) -> jax.Array:
+    return n_real_experts * jnp.sum(frac * mean_p)
+
+
+def moe_ffn_local(p: MoEParams, x, moe: MoEConfig, *, expert_offset,
+                  n_experts_pad: int, n_real_experts: int):
+    """Expert FFN for this rank's expert slice.
+
+    ``p.we*`` hold the LOCAL expert slice (already sharded by shard_map);
+    ``expert_offset`` maps global routed ids onto it.  x: (T, d) local
+    tokens (replicated across the model axis).  Returns the *partial*
+    output (T, d) — caller psums over the model axis — plus the aux loss.
+    """
+    T, d = x.shape
+    n_local_experts = p.we1.shape[0]
+    k = moe.top_k
+    cap = capacity(T, moe, n_experts_pad)
+
+    weights, ids, probs = route(x, p.router, moe, n_real_experts)
+
+    flat_e = ids.reshape(-1)                       # (T*k,)
+    flat_w = weights.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+
+    local_e = flat_e - expert_offset
+    mine = (local_e >= 0) & (local_e < n_local_experts)
+    key = jnp.where(mine, local_e, n_local_experts)       # drop-bucket last
+    order = jnp.argsort(key, stable=True)                 # (T*k,)
+    skey = key[order]
+    # rank of each entry within its expert group
+    starts = jnp.searchsorted(skey, jnp.arange(n_local_experts + 1),
+                              side="left")
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[skey].astype(jnp.int32)
+    overflow = n_local_experts * cap
+    slot = jnp.where((skey < n_local_experts) & (pos < cap),
+                     skey.astype(jnp.int32) * cap + pos, overflow)
+
+    gathered = x[flat_t[order]]                            # (T*k, d)
+    buf = jnp.zeros((n_local_experts * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(gathered)
+    buf = buf[:-1].reshape(n_local_experts, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p.we1)) * \
+        jnp.einsum("ecd,edf->ecf", buf, p.we3)
+    y = jnp.einsum("ecf,efd->ecd", h, p.we2)               # (E_loc, cap, d)
+
+    yflat = jnp.concatenate([y.reshape(-1, d),
+                             jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = yflat[slot] * flat_w[order][:, None]
+    out = jnp.zeros((T, d), x.dtype).at[flat_t[order]].add(contrib)
+
+    return out, load_balance_parts(probs, ids)
+
+
+def shared_expert_ffn(p: MoEParams, x):
+    """Always-on (deepseek 'shared') experts: a plain SwiGLU."""
+    if p.ws1 is None:
+        return jnp.zeros_like(x)
+    h = jax.nn.silu(x @ p.ws1) * (x @ p.ws3)
+    return h @ p.ws2
+
+
+def moe_ffn(p: MoEParams, x, moe: MoEConfig, *, tp_size: int, axis_name,
+            n_real_experts: int, dp_axes=()):
+    """MoE FFN over (T, d) tokens.
+
+    Inside a shard_map over the model axis, ``axis_name`` is set and each
+    rank computes its expert slice + a psum.  ``dp_axes``: data axes to
+    pmean the aux-loss ingredients over (token-means combine exactly
+    across equal shards).  Outside (single-device smoke tests),
+    tp_size == 1 computes everything locally.
+    """
+    n_local = p.we1.shape[0]               # already the per-rank slice
+    E_pad = n_local * tp_size
+    if axis_name is None:
+        out, (frac, mean_p) = moe_ffn_local(
+            p, x, moe, expert_offset=0,
+            n_experts_pad=E_pad, n_real_experts=n_real_experts)
+        out = out + shared_expert_ffn(p, x)
+    else:
+        rank = jax.lax.axis_index(axis_name)
+        offset = rank * n_local
+        out, (frac, mean_p) = moe_ffn_local(
+            p, x, moe, expert_offset=offset,
+            n_experts_pad=E_pad, n_real_experts=n_real_experts)
+        # shared experts are column-sharded over the model axis by the
+        # caller, so their partial output joins the same psum.
+        out = out + shared_expert_ffn(p, x)
+        out = jax.lax.psum(out, axis_name)
+        frac = jax.lax.pmean(frac, axis_name)
+        mean_p = jax.lax.pmean(mean_p, axis_name)
+    if dp_axes:
+        frac = jax.lax.pmean(frac, dp_axes)
+        mean_p = jax.lax.pmean(mean_p, dp_axes)
+    return out, load_balance_loss(frac, mean_p, n_real_experts)

@@ -1,0 +1,237 @@
+"""Sharding rules: how every parameter / activation / cache maps onto the
+production mesh (pod, data, model).
+
+The rules are *functions of the config*, not hand-written per arch:
+  - attention projections are head-sharded over `model` iff the head count
+    divides the model-axis size (hymba's 25 heads and granite-moe's 24
+    don't — those attentions run with replicated weights and the model
+    axis is carried by the mamba/MoE branch instead; see DESIGN.md §6);
+  - KV projections shard iff n_kv_heads divides (MQA/GQA-2 replicate);
+  - MoE experts shard over `model` (expert parallelism), padded up;
+  - mamba inner channels shard over `model`;
+  - batch shards over (pod, data); for batch-1 long-context decode the KV
+    cache sequence axis shards over (pod, data) instead (sequence
+    parallelism for the decode read).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    mesh: Optional[Mesh]
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("pod", "data")
+    shard_cache_seq: bool = False     # long_500k: shard KV seq over dp
+    seq_shard_activations: bool = False  # SP stash: shard residual d over tp
+    fsdp: bool = False                # ZeRO-3: shard params over dp too
+    dp_only: bool = False             # small-model remap: batch over ALL
+    #   mesh axes, params replicated (no TP) — §Perf/D.  FSDP composes.
+
+    @property
+    def tp(self) -> int:
+        if self.mesh is None or self.dp_only:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def t_ax(self) -> Optional[str]:
+        """tp axis name for activation specs (None under dp_only)."""
+        return None if self.dp_only else self.tp_axis
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        """dp axes actually present in the mesh (single-pod has no 'pod')."""
+        if self.mesh is None:
+            return ()
+        axes = self.dp_axes + ((self.tp_axis,) if self.dp_only else ())
+        return tuple(a for a in axes if a in self.mesh.shape)
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def cs(self, x, spec: P):
+        """with_sharding_constraint when a mesh is present, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(spec))
+
+    # ---------------- canonical activation specs ----------------------
+    def batch_spec(self, extra_dims: int = 1) -> P:
+        dp = self.dp
+        return P(dp if dp else None, *([None] * extra_dims))
+
+    def act_spec(self, cfg: ModelConfig) -> P:
+        """Residual stream (B, S, d)."""
+        dp = self.dp
+        d_ax = (self.tp_axis if self.seq_shard_activations
+                and not self.dp_only and
+                cfg.d_model % max(self.tp, 1) == 0 else None)
+        return P(dp if dp else None, None, d_ax)
+
+
+def head_shardable(n_heads: int, tp: int) -> bool:
+    return n_heads > 0 and n_heads % tp == 0
+
+
+def for_mesh(mesh: Optional[Mesh], **kw) -> MeshRules:
+    return MeshRules(mesh=mesh, **kw)
+
+
+# ---------------------------------------------------------------------
+# Parameter partition specs, by path
+# ---------------------------------------------------------------------
+
+def param_pspecs(cfg: ModelConfig, rules: MeshRules, params_tree):
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays).
+
+    Leaf dispatch is by dict path; every leaf under "layers" carries a
+    leading stacked-layer axis (never sharded).
+    """
+    tp = rules.tp
+    t = rules.tp_axis if not rules.dp_only else None
+    heads_ok = head_shardable(cfg.n_heads, tp) and t is not None
+    kv_ok = head_shardable(cfg.n_kv_heads, tp) and t is not None
+
+    def spec_for(path: Tuple[str, ...], ndim: int) -> P:
+        name = path[-1]
+        in_layers = "layers" in path
+        L = (None,) if in_layers else ()
+
+        if name == "embed":
+            # vocab-sharded in both tied and untied cases: the lookup
+            # becomes a masked-gather + all-reduce of (tokens, d) — small
+            # next to TP reductions — while the d-sharded alternative
+            # trips an XLA SPMD partitioner bug (invalid dynamic-slice)
+            # when combined with sequence-sharded activations.
+            return P(t, None)
+        if name == "head":
+            return P(None, t)               # logits vocab-sharded
+        if "norm" in name or name in ("ln1", "ln2"):
+            return P(*L, *([None] * (ndim - len(L))))
+        if name in ("conv_b", "dt_bias", "D"):   # (L, dI): shard channels
+            return P(*L, t)
+        # attention
+        if name == "wq":
+            return P(*L, None, t if heads_ok else None)
+        if name in ("wk", "wv"):
+            return P(*L, None, t if kv_ok else None)
+        if name == "wo":
+            return P(*L, t if heads_ok else None, None)
+        # mamba (dI always divides tp: dI = 2*d_model, d_model % tp == 0)
+        if name == "in_proj":
+            return P(*L, None, t)
+        if name == "conv_w":
+            return P(*L, None, t)
+        if name == "x_proj":
+            return P(*L, t, None)
+        if name == "dt_proj":
+            return P(*L, None, t)
+        if name == "A_log":
+            return P(*L, t, None)
+        if name == "out_proj":
+            return P(*L, t, None)
+        # moe
+        if name == "router":
+            return P(*L, None, None)
+        if name in ("we1", "we3", "we2"):
+            return P(*L, t, None, None)     # expert-parallel
+        if name in ("ws1", "ws3"):
+            return P(*L, None, t)
+        if name == "ws2":
+            return P(*L, t, None)
+        # dense ffn
+        if name in ("w1", "w3"):
+            return P(*L, None, t)
+        if name == "w2":
+            return P(*L, t, None)
+        raise ValueError(f"no sharding rule for param {'/'.join(path)}")
+
+    def fsdp_refine(spec: P, shape) -> P:
+        """ZeRO-3/FSDP: additionally shard the largest still-free,
+        dp-divisible dim of every big leaf over the data axes (falling
+        back to a single dp axis for odd dims — see optim.zero_assign).
+        XLA inserts the per-layer all-gather (params) and reduce-scatter
+        (grads) this implies."""
+        from repro.optim.adamw import zero_assign
+        dims = shape.shape if hasattr(shape, "shape") else shape
+        n_elems = 1
+        for d in dims:
+            n_elems *= d
+        if n_elems < (1 << 20) or not rules.dp:  # small leaves replicate
+            return spec
+        parts = list(spec) + [None] * (len(dims) - len(spec))
+        zero_assign(parts, dims, rules.dp,
+                    dict(rules.mesh.shape) if rules.mesh else None)
+        return P(*parts)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if node is None:
+            return None
+        if hasattr(node, "_fields"):        # NamedTuple
+            return type(node)(*(walk(getattr(node, f), path + (f,))
+                                for f in node._fields))
+        spec = spec_for(path, len(node.shape))
+        if rules.fsdp and "layers" in path:
+            spec = fsdp_refine(spec, node)
+        return spec
+
+    return walk(params_tree, ())
+
+
+def cache_pspecs(cfg: ModelConfig, rules: MeshRules, cache_tree,
+                 batch_size: int):
+    """Specs for the decode cache {k, v, conv, ssm} (leading layer axis)."""
+    t = rules.tp_axis if not rules.dp_only else None
+    dp = rules.dp
+    kv_ok = head_shardable(cfg.n_kv_heads, rules.tp) and t is not None
+    batch_ok = dp and batch_size % max(rules.dp_size, 1) == 0
+    b_ax = dp if batch_ok else None
+    seq_ax = dp if (rules.shard_cache_seq and not batch_ok) else None
+
+    specs = {}
+    for name, leaf in cache_tree.items():
+        if leaf is None:
+            specs[name] = None
+        elif name in ("k", "v"):            # (L, B, T, K, hd)
+            if kv_ok:
+                kv_ax, t_seq = t, None
+            else:
+                # kv heads don't divide the model axis (MQA/GQA-2/8):
+                # shard the SEQUENCE axis over `model` instead — split-KV
+                # flash-decode semantics; XLA reduces the partial
+                # softmaxes over the axis.  Otherwise a 32k cache
+                # replicates 16x and blows HBM.
+                kv_ax, t_seq = None, t
+            specs[name] = P(None, b_ax, seq_ax or t_seq, kv_ax, None)
+        elif name in ("k_scale", "v_scale"):  # (L, B, T, K)
+            kv_ax2, t_seq2 = (t, None) if kv_ok else (None, t)
+            specs[name] = P(None, b_ax, seq_ax or t_seq2, kv_ax2)
+        elif name == "conv":                # (L, B, dc-1, dI)
+            specs[name] = P(None, b_ax, None, t)
+        elif name == "ssm":                 # (L, B, dI, dS)
+            specs[name] = P(None, b_ax, t, None)
+        else:
+            raise ValueError(name)
+    return specs

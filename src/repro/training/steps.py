@@ -1,0 +1,195 @@
+"""Step builders: train_step / prefill_step / serve_step, plus input_specs.
+
+These are the functions the launcher jits and the dry-run lowers.  Each
+builder closes over (cfg, rules) and returns a pure function plus the
+in/out sharding trees, so ``jax.jit(step, in_shardings=..., ...)`` is
+assembled in one place for trainer, server, and dry-run alike.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.optim import adamw as adamw_lib
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.sharding import MeshRules, cache_pspecs, param_pspecs
+
+
+# ----------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ----------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rules: MeshRules) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for a (arch x shape) cell; no device allocation.
+
+    train/prefill: token ids (or stub frontend embeddings) + labels.
+    decode: one new token (or embedding) + per-sequence cache position.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    bspec = rules.batch_spec
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=rules.sharding(spec))
+
+    dp = rules.dp if rules.dp else None
+    batch_shardable = rules.dp_size <= 1 or B % rules.dp_size == 0
+    b_ax = dp if (dp and batch_shardable) else None
+
+    if shape.kind in ("train", "prefill"):
+        specs = {}
+        if cfg.frontend == "embed":
+            specs["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16,
+                                  P(b_ax, None, None))
+        else:
+            specs["tokens"] = sds((B, S), jnp.int32, P(b_ax, None))
+        specs["labels"] = sds((B, S), jnp.int32, P(b_ax, None))
+        return specs
+
+    # decode: single new token against a pre-filled cache
+    specs = {}
+    if cfg.frontend == "embed":
+        specs["embeds"] = sds((B, 1, cfg.d_model), jnp.bfloat16,
+                              P(b_ax, None, None))
+    else:
+        specs["tokens"] = sds((B, 1), jnp.int32, P(b_ax, None))
+    specs["pos"] = sds((B,), jnp.int32, P(b_ax))
+    return specs
+
+
+def _with_shardings(shapes, specs, rules: MeshRules):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (None-leaf safe)."""
+    def leaf(s, sp):
+        if s is None:
+            return None
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=rules.sharding(sp))
+    return jax.tree.map(
+        leaf, shapes, specs,
+        is_leaf=lambda x: x is None or hasattr(x, "shape") or
+        isinstance(x, P))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules,
+                dtype=jnp.bfloat16, kv_quant: bool = False
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract decode cache for a cell (KV len = shape.seq_len)."""
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                     dtype, kv_quant=kv_quant))
+    specs = cache_pspecs(cfg, rules, cache_shapes, shape.global_batch)
+    return _with_shardings(cache_shapes, specs, rules)
+
+
+def abstract_params(cfg: ModelConfig, rules: MeshRules,
+                    dtype=jnp.bfloat16):
+    """(shapes, pspecs, ShapeDtypeStructs-with-sharding) for the params."""
+    shapes = jax.eval_shape(
+        partial(model_lib.init_params, cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+    pspecs = param_pspecs(cfg, rules, shapes)
+    return shapes, pspecs, _with_shardings(shapes, pspecs, rules)
+
+
+def abstract_opt_state(cfg: ModelConfig, rules: MeshRules, param_shapes,
+                       pspecs, zero1: bool = True):
+    shapes = jax.eval_shape(adamw_lib.adamw_init, param_shapes)
+    dp = rules.dp
+    ospecs = adamw_lib.opt_pspecs(
+        pspecs, param_shapes, dp_axes=dp if zero1 else (),
+        dp_size=rules.dp_size if zero1 else 1,
+        mesh_shape=dict(rules.mesh.shape) if rules.mesh else None)
+    return shapes, ospecs, _with_shardings(shapes, ospecs, rules)
+
+
+# ----------------------------------------------------------------------
+# Steps
+# ----------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, rules: MeshRules, *,
+                     opt_cfg: AdamWConfig = AdamWConfig(),
+                     remat: bool = True, accum_steps: int = 1,
+                     q_chunk: int = model_lib.DEFAULT_Q_CHUNK,
+                     lr_schedule=warmup_cosine, grad_specs=None,
+                     accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    ``accum_steps`` > 1 splits the global batch into microbatches scanned
+    sequentially with gradient accumulation — the activation-footprint
+    knob (the paper's N-partitions analogue; DESIGN.md §2).  When
+    ``grad_specs`` (a spec tree, typically the ZeRO-1 optimizer-state
+    specs) is given, the fp32 accumulator is constrained to it, so XLA
+    reduce-scatters each microbatch's gradients into a dp-sharded
+    accumulator instead of keeping a replicated fp32 copy of the model
+    (ZeRO-2-style gradient sharding).
+    """
+
+    def loss(params, batch):
+        return model_lib.loss_fn(params, batch, cfg, rules, remat=remat,
+                                 q_chunk=q_chunk)
+
+    def constrain_grads(g):
+        if grad_specs is None or rules.mesh is None:
+            return g
+        return jax.tree.map(
+            lambda x, sp: rules.cs(x, sp) if sp is not None else x,
+            g, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, _ = carry
+                (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                g = jax.tree.map(lambda x: x.astype(accum_dtype), g)
+                acc = constrain_grads(jax.tree.map(jnp.add, acc, g))
+                return (acc, l), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum_steps,
+                                     x.shape[0] // accum_steps) + x.shape[1:]),
+                batch)
+            zeros = constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (grads, l), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)),
+                                         micro_batches)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = {"nll": l, "aux": jnp.float32(0)}
+
+        lr_scale = lr_schedule(opt_state["step"])
+        new_params, new_opt, opt_metrics = adamw_lib.adamw_update(
+            grads, opt_state, params, opt_cfg, lr_scale=lr_scale)
+        metrics = dict(metrics, **opt_metrics, loss=l)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, rules: MeshRules, *,
+                       q_chunk: int = model_lib.DEFAULT_Q_CHUNK):
+    def prefill_step(params, batch):
+        logits, cache = model_lib.prefill(params, batch, cfg, rules,
+                                          q_chunk=q_chunk)
+        return jnp.argmax(logits, axis=-1), cache
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, rules: MeshRules):
+    """One-token decode step: greedy next token + updated cache."""
+
+    def serve_step(params, cache, batch):
+        logits, new_cache = model_lib.decode_step(params, cache, batch, cfg,
+                                                  rules)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+    return serve_step

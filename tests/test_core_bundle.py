@@ -1,0 +1,95 @@
+"""Property tests for the paper's core invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bundle import Bundle, bundle_map, bundle_map_reduce, gather
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _mk_bundle(n, k_arrays, seed=0, mesh=None):
+    key = jax.random.PRNGKey(seed)
+    data = {f"d{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                       (n, 3 + i))
+            for i in range(k_arrays)}
+    return Bundle.create(data, mesh=mesh)
+
+
+@given(n=st.integers(2, 64), k=st.integers(1, 5))
+def test_bundle_invariant_and_roundtrip(n, k):
+    b = _mk_bundle(n, k)
+    assert b.n_records == n
+    out = gather(b)
+    assert set(out) == {f"d{i}" for i in range(k)}
+    for i in range(k):
+        assert out[f"d{i}"].shape == (n, 3 + i)
+
+
+@given(n=st.integers(2, 32))
+def test_bundle_rejects_misaligned_leading_axis(n):
+    key = jax.random.PRNGKey(0)
+    data = {"a": jnp.zeros((n, 2)), "b": jnp.zeros((n + 1, 2))}
+    with pytest.raises(ValueError):
+        Bundle.create(data)
+
+
+@given(n=st.integers(2, 48), scale=st.floats(-2, 2))
+def test_map_commutes_with_local_apply(n, scale):
+    """map(f) on the bundle == f applied to the gathered arrays — the
+    Bundle/Unbundle re-usability property."""
+    b = _mk_bundle(n, 2)
+    f = lambda d: {"d0": d["d0"] * scale + 1.0, "d1": d["d1"] ** 2}
+    mapped = gather(bundle_map(f, b))
+    direct = jax.tree.map(np.asarray, f(b.data))
+    for name in mapped:
+        np.testing.assert_allclose(mapped[name], direct[name],
+                                   rtol=1e-5, atol=1e-5)
+
+
+@given(n=st.integers(2, 48))
+def test_map_reduce_equals_sequential_reduce(n):
+    b = _mk_bundle(n, 2)
+    part = bundle_map_reduce(
+        lambda d: {"s": jnp.sum(d["d0"]), "g": d["d1"].T @ d["d1"]}, b)
+    np.testing.assert_allclose(float(part["s"]),
+                               float(jnp.sum(b.data["d0"])), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(part["g"]),
+                               np.asarray(b.data["d1"].T @ b.data["d1"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_zip_requires_equal_records():
+    a, b = _mk_bundle(8, 1), _mk_bundle(12, 1, seed=1)
+    with pytest.raises(ValueError):
+        a.zip(b)
+
+
+def test_persistence_policies_equivalent():
+    """MEMORY_ONLY (remat) and plain step compute identical results."""
+    from repro.core import persistence as P
+    b = _mk_bundle(16, 2)
+
+    def step(d, rep, axes):
+        return {"d0": d["d0"] * 2, "d1": d["d1"] + 1}, jnp.sum(d["d0"])
+
+    wrapped = P.wrap_step(step, P.Policy.MEMORY_ONLY)
+    out1, c1 = step(b.data, None, ())
+    out2, c2 = wrapped(b.data, None, ())
+    np.testing.assert_allclose(float(c1), float(c2))
+    for k in out1:
+        np.testing.assert_allclose(np.asarray(out1[k]),
+                                   np.asarray(out2[k]))
+
+
+def test_spill_restore_roundtrip():
+    from repro.core import persistence as P
+    b = _mk_bundle(16, 3)
+    host = P.spill(b)
+    b2 = P.restore(b, host)
+    for k in b.data:
+        np.testing.assert_allclose(np.asarray(b.data[k]),
+                                   np.asarray(b2.data[k]))

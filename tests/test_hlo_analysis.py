@@ -1,0 +1,85 @@
+"""Unit tests for the HLO analyzer that feeds the roofline."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_hlo, type_bytes
+
+
+def test_type_bytes():
+    assert type_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert type_bytes("bf16[2,3]{1,0}") == 12
+    assert type_bytes("(s32[], f32[4,4]{1,0}, /*index=2*/bf16[8]{0})") == \
+        4 + 64 + 16
+    assert type_bytes("f32[]") == 4
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_flops_counts_scanned_matmuls():
+    """Trip-count correction: a 10-step scanned matmul counts 10x (XLA's
+    cost_analysis counts it once — the bug this module exists to fix)."""
+    def f(w, x):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out.sum()
+
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(f, w, x)
+    stats = analyze(c.as_text())
+    one = 2 * 128 ** 3
+    assert stats.n_while == 1
+    assert stats.trip_counts[0] == 10
+    assert 9.5 * one <= stats.flops <= 11 * one
+
+
+def test_flops_unscanned_matches_cost_analysis():
+    def f(a, b):
+        return (a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+    c = _compile(f, a, b)
+    stats = analyze(c.as_text())
+    expect = 2 * 256 * 64 * 512
+    assert abs(stats.flops - expect) / expect < 0.05
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b).sum()
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    c = _compile(f, a, b)
+    stats = analyze(c.as_text())
+    expect = 2 * 4 * 32 * 64 * 16
+    assert abs(stats.flops - expect) / expect < 0.05
+
+
+def test_traffic_nonzero_and_bounded():
+    def f(a):
+        return jnp.tanh(a * 2.0 + 1.0).sum()
+
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = _compile(f, a)
+    stats = analyze(c.as_text())
+    nbytes = 1024 * 1024 * 4
+    assert nbytes * 0.9 <= stats.traffic_bytes <= nbytes * 6
+
+
+def test_parse_handles_tuple_types_with_comments():
+    comps, entry = parse_hlo(
+        "ENTRY %main (p: f32[4]) -> f32[4] {\n"
+        "  %p = f32[4]{0} parameter(0)\n"
+        "  %t = (f32[4]{0}, /*index=1*/s32[2]{0}) tuple(%p, %p)\n"
+        "  ROOT %g = f32[4]{0} get-tuple-element(%t), index=0\n"
+        "}\n")
+    ops = comps[entry].ops
+    assert [o.kind for o in ops] == ["parameter", "tuple",
+                                     "get-tuple-element"]
+    assert ops[1].result_bytes == 16 + 8

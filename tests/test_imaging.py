@@ -1,0 +1,135 @@
+"""Use-case tests: starlet/PSF operator properties (hypothesis) and the
+distributed == sequential equivalences of Algorithms 1 & 2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bundle import Bundle
+from repro.imaging import lowrank as lr
+from repro.imaging import psf as psf_op
+from repro.imaging import starlet
+from repro.imaging.condat import SolverConfig, solve
+from repro.imaging.deconvolve import deconvolve
+from repro.imaging.scdl import SCDLConfig, train
+from repro.data.synthetic import coupled_patches
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+KEY = jax.random.PRNGKey(11)
+
+
+# ------------------------------------------------------------- starlet
+@given(n_scales=st.integers(1, 5), seed=st.integers(0, 100))
+def test_starlet_perfect_reconstruction(n_scales, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (41, 41))
+    co = starlet.decompose(x, n_scales)
+    np.testing.assert_allclose(np.asarray(starlet.recompose(co)),
+                               np.asarray(x), rtol=1e-4, atol=1e-5)
+
+
+@given(n_scales=st.integers(1, 4), seed=st.integers(0, 100))
+def test_starlet_adjoint_dot_product(n_scales, seed):
+    """<Phi x, u> == <x, Phi^T u> to fp32 precision."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (32, 32))
+    u = jax.random.normal(k2, (n_scales, 32, 32))
+    lhs = float(jnp.sum(starlet.forward(x, n_scales) * u))
+    rhs = float(jnp.sum(x * starlet.adjoint(u, n_scales)))
+    assert abs(lhs - rhs) <= 1e-4 * max(abs(lhs), 1.0)
+
+
+# ------------------------------------------------------------------ H
+@given(seed=st.integers(0, 50))
+def test_psf_operator_adjoint(seed):
+    data = psf_op.simulate(4, jax.random.PRNGKey(seed))
+    y = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                          data.Y.shape)
+    lhs = float(jnp.sum(psf_op.H(data.X_true, data.psfs) * y))
+    rhs = float(jnp.sum(data.X_true * psf_op.Ht(y, data.psfs)))
+    assert abs(lhs - rhs) <= 1e-4 * max(abs(lhs), 1.0)
+
+
+def test_psf_convolve_matches_direct():
+    """FFT convolution == direct convolution on a small case."""
+    from scipy.signal import convolve2d
+    x = np.asarray(jax.random.normal(KEY, (9, 9)), np.float64)
+    k = np.zeros((9, 9)); k[3:6, 3:6] = np.random.RandomState(0).rand(3, 3)
+    out = np.asarray(psf_op.convolve(jnp.array(x)[None],
+                                     jnp.array(k, jnp.float32)[None]))[0]
+    ref = convolve2d(x, k, mode="same")
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------- Algorithm 1 (PSF)
+@pytest.fixture(scope="module")
+def psf_data():
+    return psf_op.simulate(8, jax.random.PRNGKey(2))
+
+
+def test_sparse_deconvolution_improves_mse(psf_data):
+    cfg = SolverConfig(mode="sparse", n_scales=3)
+    X, costs = solve(psf_data.Y, psf_data.psfs, cfg,
+                     sigma_noise=psf_data.sigma, n_iter=40)
+    mse_obs = float(jnp.mean((psf_data.Y - psf_data.X_true) ** 2))
+    mse_dec = float(jnp.mean((X - psf_data.X_true) ** 2))
+    assert mse_dec < 0.2 * mse_obs
+    assert float(costs[-1]) < float(costs[0])
+
+
+def test_distributed_sparse_equals_sequential(psf_data):
+    cfg = SolverConfig(mode="sparse", n_scales=3)
+    _, costs = solve(psf_data.Y, psf_data.psfs, cfg,
+                     sigma_noise=psf_data.sigma, n_iter=15)
+    _, log = deconvolve(psf_data.Y, psf_data.psfs, cfg, mesh=None,
+                        sigma_noise=psf_data.sigma, max_iter=15, tol=0)
+    np.testing.assert_allclose(np.asarray(costs), np.asarray(log.costs),
+                               rtol=1e-4)
+
+
+def test_distributed_lowrank_converges(psf_data):
+    """Primal-dual cost is not monotone; require recovery quality and a
+    bounded, non-diverging trajectory instead."""
+    cfg = SolverConfig(mode="lowrank", lam=0.05, rank=8)
+    Xd, log = deconvolve(psf_data.Y, psf_data.psfs, cfg, mesh=None,
+                         max_iter=25, tol=0)
+    assert np.isfinite(log.costs).all()
+    assert max(log.costs[5:]) <= log.costs[0] * 1.1
+    mse_obs = float(jnp.mean((psf_data.Y - psf_data.X_true) ** 2))
+    mse_dec = float(np.mean((Xd - np.asarray(psf_data.X_true)) ** 2))
+    assert mse_dec < mse_obs
+
+
+def test_randomized_svt_matches_exact():
+    """Distributed randomized SVT == exact SVT on a low-rank matrix."""
+    k1, k2 = jax.random.split(KEY)
+    U = jax.random.normal(k1, (64, 5))
+    V = jax.random.normal(k2, (5, 30))
+    A = U @ V
+    omega = lr.make_test_matrix(30, rank=8, key=KEY)
+    exact = lr.svt(A, 0.5)
+    approx = lr.randomized_svt_local(A, omega, 0.5, axes=None)
+    np.testing.assert_allclose(np.asarray(approx), np.asarray(exact),
+                               rtol=5e-3, atol=5e-3)
+
+
+# -------------------------------------------------- Algorithm 2 (SCDL)
+def test_scdl_converges_and_reconstructs():
+    S_h, S_l = coupled_patches(512, 25, 9, 32, seed=4)
+    cfg = SCDLConfig(n_atoms=32, max_iter=15)
+    Xh, Xl, log = train(S_h, S_l, cfg)
+    assert log.costs[-1] < 0.25 * log.costs[0]
+    assert Xh.shape == (25, 32) and Xl.shape == (9, 32)
+    norms = np.linalg.norm(Xh, axis=0)
+    assert (norms <= 1.0 + 1e-4).all()
+
+
+def test_scdl_cost_monotone_tail():
+    S_h, S_l = coupled_patches(256, 25, 9, 16, seed=5)
+    cfg = SCDLConfig(n_atoms=16, max_iter=12)
+    _, _, log = train(S_h, S_l, cfg)
+    # NRMSE after the burn-in should never regress by more than 5%
+    tail = log.costs[3:]
+    assert all(b <= a * 1.05 for a, b in zip(tail, tail[1:]))

@@ -1,0 +1,153 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against the pure-jnp
+oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- flash
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+FA_CASES = [
+    # B, H, K, S, T, D, causal, window
+    (2, 4, 2, 256, 256, 64, True, 0),
+    (1, 4, 4, 128, 128, 128, True, 0),
+    (2, 8, 2, 256, 256, 64, True, 64),
+    (1, 2, 1, 128, 256, 64, True, 0),
+    (1, 2, 2, 256, 256, 32, False, 0),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    B, H, K, S, T, D, causal, win = case
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, S, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, K, T, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, K, T, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=win)
+    ref = attention_ref(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# --------------------------------------------------------------- decode
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+DEC_CASES = [
+    (2, 8, 2, 1024, 64, 0),
+    (1, 4, 1, 512, 128, 0),
+    (2, 4, 4, 1024, 64, 128),
+    (3, 6, 2, 512, 32, 0),
+]
+
+
+@pytest.mark.parametrize("case", DEC_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(case, dtype):
+    B, H, K, T, D, win = case
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, K, T, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, K, T, D), dtype)
+    lengths = (jnp.arange(B) * (T // (2 * B)) + T // 2).astype(jnp.int32)
+    out = decode_attention(q, k, v, lengths, window=win)
+    ref = decode_attention_ref(q, k, v, lengths, window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ----------------------------------------------------------------- scan
+from repro.kernels.selective_scan.ops import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+SCAN_CASES = [(2, 128, 256, 16), (1, 64, 512, 8), (4, 256, 256, 4)]
+
+
+@pytest.mark.parametrize("case", SCAN_CASES)
+def test_selective_scan(case):
+    B, L, dI, dS = case
+    a = jax.random.uniform(jax.random.fold_in(KEY, 4), (B, L, dI, dS),
+                           minval=0.5, maxval=0.99)
+    b = jax.random.normal(jax.random.fold_in(KEY, 5), (B, L, dI, dS)) * .1
+    C = jax.random.normal(jax.random.fold_in(KEY, 6), (B, L, dS))
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 7), (B, dI, dS))
+    y, h = selective_scan(a, b, C, h0)
+    yr, hr = selective_scan_ref(a, b, C, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_selective_scan_matches_model_mixer():
+    """The kernel implements the same recurrence as models.mamba."""
+    from repro.models.mamba import _chunk_scan
+    B, L, dI, dS = 2, 64, 128, 16
+    a = jax.random.uniform(jax.random.fold_in(KEY, 8), (B, L, dI, dS),
+                           minval=0.5, maxval=0.99)
+    b = jax.random.normal(jax.random.fold_in(KEY, 9), (B, L, dI, dS)) * .1
+    C = jax.random.normal(jax.random.fold_in(KEY, 10), (B, L, dS))
+    h0 = jnp.zeros((B, dI, dS))
+    y_m, h_m = _chunk_scan(a, b, C, h0, chunk=16)
+    y_k, h_k = selective_scan(a, b, C, h0)
+    np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_k),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_m), np.asarray(h_k),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------------- starlet
+from repro.kernels.starlet2d.ops import decompose as k_decompose
+from repro.kernels.starlet2d.ops import smooth as k_smooth
+from repro.kernels.starlet2d.ref import smooth_ref
+from repro.imaging import starlet
+
+
+@pytest.mark.parametrize("scale", [0, 1, 2, 3])
+@pytest.mark.parametrize("shape", [(128, 41, 41), (256, 32, 32)])
+def test_starlet_smooth(scale, shape):
+    imgs = jax.random.normal(jax.random.fold_in(KEY, 11), shape)
+    out = k_smooth(imgs, scale=scale)
+    ref = smooth_ref(imgs, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_starlet_kernel_decompose_matches_imaging():
+    imgs = jax.random.normal(jax.random.fold_in(KEY, 12), (128, 41, 41))
+    co = k_decompose(imgs, 3)
+    ref = jax.vmap(lambda im: starlet.decompose(im, 3),
+                   in_axes=0, out_axes=1)(imgs)
+    np.testing.assert_allclose(np.asarray(co), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- dict outer
+from repro.kernels.dict_outer.ops import dict_outer
+from repro.kernels.dict_outer.ref import dict_outer_ref
+
+DO_CASES = [(2048, 25, 64), (1024, 289, 128), (512, 9, 256)]
+
+
+@pytest.mark.parametrize("case", DO_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dict_outer(case, dtype):
+    K, P, A = case
+    S = jax.random.normal(jax.random.fold_in(KEY, 13), (K, P), dtype)
+    W = jax.random.normal(jax.random.fold_in(KEY, 14), (K, A), dtype)
+    sw, ww = dict_outer(S, W)
+    swr, wwr = dict_outer_ref(S, W)
+    tol = dict(rtol=2e-2, atol=K * 2e-3) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=K * 1e-6)
+    np.testing.assert_allclose(np.asarray(sw), np.asarray(swr), **tol)
+    np.testing.assert_allclose(np.asarray(ww), np.asarray(wwr), **tol)

@@ -1,0 +1,130 @@
+"""Model-level invariants (hypothesis where applicable)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import model as M
+from repro.parallel.sharding import MeshRules
+
+settings.register_profile("ci", max_examples=8, deadline=None)
+settings.load_profile("ci")
+
+RULES = MeshRules(mesh=None)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma3-27b",
+                                  "falcon-mamba-7b", "hymba-1.5b"])
+def test_causality(arch):
+    """Hidden state at position i must not depend on tokens > i —
+    for attention (causal mask), sliding windows, AND the mamba scan."""
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    key = jax.random.PRNGKey(1)
+    S, cut = 16, 9
+    t1 = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[:, cut:].set((t1[:, cut:] + 7) % cfg.vocab_size)
+    h1, _, _ = M.forward(params, {"tokens": t1}, cfg, RULES, remat=False,
+                         q_chunk=0)
+    h2, _, _ = M.forward(params, {"tokens": t2}, cfg, RULES, remat=False,
+                         q_chunk=0)
+    np.testing.assert_allclose(np.asarray(h1[:, :cut]),
+                               np.asarray(h2[:, :cut]),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(h1[:, cut:]),
+                           np.asarray(h2[:, cut:]), atol=1e-4)
+
+
+@given(seed=st.integers(0, 30))
+def test_q_chunking_invariance(seed):
+    """Lazy-flash query chunking must not change the forward values."""
+    cfg = reduced(get_config("glm4-9b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (2, 16), 0,
+                                cfg.vocab_size)
+    h_full, _, _ = M.forward(params, {"tokens": tokens}, cfg, RULES,
+                             remat=False, q_chunk=0)
+    h_chunk, _, _ = M.forward(params, {"tokens": tokens}, cfg, RULES,
+                              remat=False, q_chunk=4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h_chunk),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_remat_invariance():
+    """MEMORY_ONLY persistence (remat) must not change loss or grads."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    f = lambda remat: jax.value_and_grad(
+        lambda p: M.loss_fn(p, batch, cfg, RULES, remat=remat,
+                            q_chunk=0)[0])(params)
+    l1, g1 = f(True)
+    l2, g2 = f(False)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "glm4-9b", "hymba-1.5b"])
+def test_int8_kv_decode_matches_bf16(arch):
+    """§Perf/F: int8-quantized KV decode must track the exact decode
+    closely (small logit error, identical greedy tokens)."""
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    S = 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0,
+                              cfg.vocab_size)
+    hidden, _, _ = M.forward(params, {"tokens": toks}, cfg, RULES,
+                             remat=False, q_chunk=0)
+    ref_logits = M._head_logits(params, hidden, cfg, RULES)[:, -1:]
+    _, cache = M.prefill(params, {"tokens": toks[:, :S - 1]}, cfg, RULES,
+                         q_chunk=0)
+    for k in ("k", "v"):
+        if k in cache:
+            pad = jnp.zeros(cache[k].shape[:2] + (1,) + cache[k].shape[3:],
+                            cache[k].dtype)
+            cache[k] = jnp.concatenate([cache[k], pad], axis=2)
+    qcache = M.quantize_cache(cache)
+    dec = {"tokens": toks[:, S - 1:S],
+           "pos": jnp.full((2,), S - 1, jnp.int32)}
+    logits_q, new_cache = M.decode_step(params, qcache, dec, cfg, RULES)
+    assert float(jnp.max(jnp.abs(logits_q - ref_logits))) < 0.15
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(logits_q, -1)),
+                                  np.asarray(jnp.argmax(ref_logits, -1)))
+    if "k" in new_cache:
+        assert new_cache["k"].dtype == jnp.int8
+
+
+def test_sliding_window_layers_ignore_far_context():
+    """gemma3-family local layers: far-past perturbations must not leak
+    through a window-limited all-local model."""
+    base = reduced(get_config("gemma3-27b"))
+    # all-local variant, window 4
+    cfg = dataclasses.replace(base, local_global_ratio=0, sliding_window=4,
+                              global_layers=(),
+                              rope_theta_local=base.rope_theta)
+    cfg = dataclasses.replace(
+        cfg, global_layers=())
+    object.__setattr__  # noqa — frozen dataclass handled via replace
+    # force every layer local by making the pattern never emit global
+    cfg = dataclasses.replace(cfg, local_global_ratio=10**6)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    key = jax.random.PRNGKey(2)
+    S = 24
+    t1 = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 3) % cfg.vocab_size)
+    h1, _, _ = M.forward(params, {"tokens": t1}, cfg, RULES, remat=False,
+                         q_chunk=0)
+    h2, _, _ = M.forward(params, {"tokens": t2}, cfg, RULES, remat=False,
+                         q_chunk=0)
+    # with window 4 and 2 layers, influence reaches <= ~8 positions;
+    # the tail must be identical
+    np.testing.assert_allclose(np.asarray(h1[:, -4:]),
+                               np.asarray(h2[:, -4:]),
+                               rtol=1e-5, atol=1e-5)
