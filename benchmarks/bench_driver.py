@@ -1,0 +1,141 @@
+"""Dispatch-overhead benchmark: per-step driver vs fused chunked scan.
+
+The paper's headline claim is that removing the per-iteration driver
+round-trip dominates everything else.  This table measures it directly
+on the PSF sparse workload, four ways:
+
+- ``seed_per_step`` — the seed execution model: one dispatch + one host
+  sync per iteration AND the seed per-iteration math (per-stamp vmap
+  starlet cascades, PSF kernel FFTs recomputed inside every H/Ht, H(X)
+  evaluated twice per iteration).  This is the baseline the acceptance
+  ratio is measured against.
+- ``per_step`` — same per-iteration dispatch pattern, current math
+  (batched starlet kernel, cached PSF FFTs, carried forward model);
+  isolates the math win.
+- ``chunk8`` / ``chunk32`` — K iterations fused on-device per dispatch
+  via ``core.engine.make_scan_step``; adds the execution-model win.
+
+Cost trajectories of every variant are asserted equal to the sequential
+reference (rtol 1e-5), so the speedups are pure implementation, not
+algorithm.  Emits one ``BENCH {json}`` line per variant (tracked in the
+perf trajectory) plus the common CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_driver [--smoke]
+"""
+from __future__ import annotations
+
+import json
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.bundle import Bundle
+from repro.core.driver import IterativeDriver
+from repro.imaging import psf as psf_op
+from repro.imaging import starlet
+from repro.imaging.condat import SolverConfig, solve
+from repro.imaging.deconvolve import (build_bundle, make_light_step_fn,
+                                      make_step_fn)
+
+CHUNKS = (1, 8, 32)
+
+
+def make_seed_step_fn(cfg: SolverConfig):
+    """The seed's per-iteration math, kept verbatim as the benchmark
+    baseline: vmap-of-rolls starlet transforms, H/Ht with the PSF FFT
+    recomputed per call, and H(X) evaluated for gradient and cost
+    separately."""
+    fwd = jax.vmap(partial(starlet.forward, n_scales=cfg.n_scales))
+    adj = jax.vmap(partial(starlet.adjoint, n_scales=cfg.n_scales),
+                   in_axes=1)
+
+    def step(d, rep, axes):
+        Y, psfs, Xp = d["Y"], d["psf"], d["Xp"]
+        tau, sig = rep["tau"], rep["sig"]
+        U = jnp.swapaxes(d["Xd"], 0, 1)
+        W = jnp.swapaxes(d["W"], 0, 1)
+        grad = psf_op.Ht(psf_op.H(Xp, psfs) - Y, psfs)
+        X_new = jnp.maximum(Xp - tau * grad - tau * adj(U), 0.0)
+        X_bar = 2 * X_new - Xp
+        U_new = jnp.clip(U + sig * fwd(X_bar).swapaxes(0, 1), -W, W)
+        cost = 0.5 * jnp.sum((Y - psf_op.H(X_new, psfs)) ** 2) + \
+            jnp.sum(jnp.abs(W * fwd(X_new).swapaxes(0, 1)))
+        if axes:
+            cost = jax.lax.psum(cost, axes)
+        return dict(d, Xp=X_new, Xd=jnp.swapaxes(U_new, 0, 1)), \
+            {"cost": cost}
+
+    return step
+
+
+def _drive(data, cfg, iters: int, chunk: int,
+           seed_math: bool = False) -> IterativeDriver:
+    bundle, _ = build_bundle(data.Y, data.psfs, cfg,
+                             sigma_noise=data.sigma)
+    if seed_math:
+        stripped = {k: v for k, v in bundle.data.items()
+                    if k not in ("psf_f", "HX")}
+        bundle = Bundle(data=stripped, replicated=bundle.replicated,
+                        mesh=bundle.mesh, axes=bundle.axes)
+        driver = IterativeDriver(make_seed_step_fn(cfg), bundle,
+                                 max_iter=iters, tol=0, chunk=chunk)
+    else:
+        driver = IterativeDriver(
+            make_step_fn(cfg), bundle, max_iter=iters, tol=0,
+            chunk=chunk, step_fn_light=make_light_step_fn(cfg))
+    driver.run()
+    return driver
+
+
+def _per_iter_us(driver: IterativeDriver, chunk: int) -> float:
+    # the first dispatch of each compiled program includes XLA
+    # compilation; drop the first chunk (keeping at least one sample when
+    # the whole run fits in a single chunk) and report the median
+    times = driver.log.times
+    skip = min(max(chunk, 1), max(len(times) - 1, 0))
+    return float(np.median(np.asarray(times[skip:])) * 1e6)
+
+
+def run(n: int = 256, iters: int = 96, smoke: bool = False) -> None:
+    if smoke:
+        n, iters = 32, 24
+    data = psf_op.simulate(n, jax.random.PRNGKey(1))
+    cfg = SolverConfig(mode="sparse", n_scales=3)
+    _, costs_ref = solve(data.Y, data.psfs, cfg, sigma_noise=data.sigma,
+                         n_iter=iters)
+    costs_ref = np.asarray(costs_ref)
+
+    variants = [("seed_per_step", 1, True)]
+    variants += [("per_step" if c == 1 else f"chunk{c}", c, False)
+                 for c in CHUNKS]
+    results = {}
+    for label, chunk, seed_math in variants:
+        driver = _drive(data, cfg, iters, chunk, seed_math=seed_math)
+        np.testing.assert_allclose(np.asarray(driver.log.costs),
+                                   costs_ref, rtol=1e-5)
+        us = _per_iter_us(driver, chunk)
+        results[label] = us
+        base = results["seed_per_step"]
+        rec = {
+            "name": f"driver_dispatch/sparse_n{n}_{label}",
+            "us_per_iter": round(us, 1),
+            "vs_seed_per_step": round(us / base, 3),
+            "traj_match": True,
+        }
+        if "per_step" in results and label.startswith("chunk"):
+            rec["vs_per_step"] = round(us / results["per_step"], 3)
+        print("BENCH " + json.dumps(rec), flush=True)
+        emit(f"driver/sparse_n{n}_{label}", us,
+             f"x_seed={us / base:.3f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

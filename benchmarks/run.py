@@ -1,9 +1,12 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,lm]
+    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,lm,driver]
+                                            [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
-single-core measurement caveats; the derived column is defined per table).
+single-core measurement caveats; the derived column is defined per
+table).  ``--smoke`` shrinks the driver table to a tiny problem size for
+CI.
 """
 from __future__ import annotations
 
@@ -14,7 +17,8 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="psf,scdl,memory,lm")
+    ap.add_argument("--only", default="psf,scdl,memory,lm,driver")
+    ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     wanted = set(args.only.split(","))
 
@@ -32,6 +36,10 @@ def main() -> None:
     if "lm" in wanted:
         from benchmarks import bench_lm
         _run(bench_lm.run, "lm", failures)
+    if "driver" in wanted:
+        from benchmarks import bench_driver
+        _run(lambda: bench_driver.run(smoke=args.smoke), "driver",
+             failures)
     if failures:
         print(f"# FAILED tables: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -34,6 +34,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
+
 
 def _dp_axes(mesh: Optional[Mesh], axes: Optional[Tuple[str, ...]] = None
              ) -> Tuple[str, ...]:
@@ -147,13 +149,13 @@ def bundle_map(fn: Callable, bundle: Bundle, *, has_replicated: bool = False
         local = lambda d, r: fn(d, r)
         out_shape = jax.eval_shape(fn, local_shapes, bundle.replicated)
         spec_out = jax.tree.map(lambda _: bundle.record_spec(), out_shape)
-        mapped = jax.shard_map(local, mesh=bundle.mesh,
+        mapped = shard_map(local, mesh=bundle.mesh,
                                in_specs=(spec_in, rep_spec),
                                out_specs=spec_out, check_vma=False)
         return bundle.with_data(mapped(bundle.data, bundle.replicated))
     out_shape = jax.eval_shape(fn, local_shapes)
     spec_out = jax.tree.map(lambda _: bundle.record_spec(), out_shape)
-    mapped = jax.shard_map(fn, mesh=bundle.mesh, in_specs=(spec_in,),
+    mapped = shard_map(fn, mesh=bundle.mesh, in_specs=(spec_in,),
                            out_specs=spec_out, check_vma=False)
     return bundle.with_data(mapped(bundle.data))
 
@@ -188,13 +190,13 @@ def bundle_map_reduce(map_fn: Callable, bundle: Bundle, *,
         out_shape = jax.eval_shape(map_fn, local_shapes,
                                    bundle.replicated)
         spec_out = jax.tree.map(lambda _: P(), out_shape)
-        return jax.shard_map(local, mesh=bundle.mesh,
+        return shard_map(local, mesh=bundle.mesh,
                              in_specs=(spec_in, rep_spec),
                              out_specs=spec_out, check_vma=False)(
             bundle.data, bundle.replicated)
     out_shape = jax.eval_shape(map_fn, local_shapes)
     spec_out = jax.tree.map(lambda _: P(), out_shape)
-    return jax.shard_map(local, mesh=bundle.mesh, in_specs=(spec_in,),
+    return shard_map(local, mesh=bundle.mesh, in_specs=(spec_in,),
                          out_specs=spec_out, check_vma=False)(bundle.data)
 
 

@@ -1,0 +1,38 @@
+"""Version-compatibility shims for the jax API surface this repo uses.
+
+The code targets current jax (``jax.shard_map``, ``check_vma``,
+``jax.make_mesh(axis_types=...)``); older releases (< 0.5) ship the same
+functionality as ``jax.experimental.shard_map`` with ``check_rep`` and a
+``make_mesh`` without ``axis_types``.  Routing every call site through
+this module keeps the rest of the codebase written against the modern
+API only.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (newer jax) with a psum(1) fallback that
+    works inside any collective context on older releases."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit (Auto) axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -5,6 +5,17 @@ Runs phase (a) configuration, (b) parallelization (bundle creation), and
 production system needs that Spark gave the paper for free or not at all:
 checkpoint/restart hooks, straggler watchdog (step-time EMA), and elastic
 re-partitioning on restore (``repro.checkpoint``).
+
+Execution modes (DESIGN.md §12):
+
+- ``chunk=1``  — one dispatch + one host sync per iteration (the paper's
+  Spark driver loop, and the baseline for ``benchmarks/bench_driver``);
+- ``chunk=K>1`` — K iterations fused on-device via
+  ``core.engine.make_scan_step``: the host sees one dispatch, one
+  ``(K,)`` cost buffer, and one convergence check per chunk.  Broadcast
+  state (``update_replicated``) is folded into the scan carry, so
+  learners with per-iteration driver broadcasts (SCDL's dictionaries)
+  run through this same generic loop.
 """
 from __future__ import annotations
 
@@ -13,10 +24,11 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bundle import Bundle
-from repro.core.engine import make_step
+from repro.core.engine import init_out_like, make_scan_step, make_step
 
 
 @dataclass
@@ -34,10 +46,12 @@ class RunLog:
 class IterativeDriver:
     """Drive step(state) -> (state, cost) to convergence.
 
-    ``step_fn(data_local, replicated, axes) -> (data_local', cost)`` is
-    compiled once via ``core.engine.make_step`` and applied until the
-    relative cost change drops below ``tol`` (the paper's epsilon) or
-    ``max_iter`` is hit.
+    ``step_fn(data_local, replicated, axes) -> (data_local', out)`` is
+    compiled once (per chunk length) and applied until the relative cost
+    change drops below ``tol`` (the paper's epsilon) or ``max_iter`` is
+    hit.  ``out`` is either a scalar cost or a dict with a ``"cost"``
+    entry plus optional replicated state consumed by
+    ``update_replicated``.
     """
 
     def __init__(self, step_fn: Callable, bundle: Bundle, *,
@@ -45,47 +59,167 @@ class IterativeDriver:
                  cost_window: int = 3,
                  straggler_factor: float = 3.0,
                  checkpoint_every: int = 0,
-                 checkpoint_fn: Optional[Callable] = None):
+                 checkpoint_fn: Optional[Callable] = None,
+                 chunk: int = 8,
+                 cost_every: int = 1,
+                 update_replicated: Optional[Callable] = None,
+                 step_fn_light: Optional[Callable] = None):
         self.bundle = bundle
-        self.step = make_step(step_fn, bundle)
+        self.step_fn = step_fn
+        self.step_fn_light = step_fn_light
+        self.update_replicated = update_replicated
         self.max_iter = max_iter
         self.tol = tol
         self.cost_window = cost_window
         self.straggler_factor = straggler_factor
         self.checkpoint_every = checkpoint_every
         self.checkpoint_fn = checkpoint_fn
+        self.chunk = max(int(chunk), 1)
+        self.cost_every = max(int(cost_every), 1)
         self.log = RunLog()
+        self._compiled: Dict[int, Callable] = {}
 
+    # ------------------------------------------------------ compilation
+    def _scan_step(self, k: int) -> Callable:
+        """Fused K-iteration step, compiled once per distinct chunk
+        length (the tail chunk of a run compiles a second, shorter
+        program)."""
+        if k not in self._compiled:
+            self._compiled[k] = make_scan_step(
+                self.step_fn, self.bundle, chunk=k,
+                update_replicated=self.update_replicated,
+                fn_light=self.step_fn_light, cost_every=self.cost_every)
+        return self._compiled[k]
+
+    @property
+    def step(self) -> Callable:
+        """The per-iteration compiled step (chunk=1 legacy path)."""
+        if "per_step" not in self._compiled:
+            self._compiled["per_step"] = make_step(self.step_fn,
+                                                   self.bundle)
+        return self._compiled["per_step"]
+
+    @property
+    def _light_step(self) -> Callable:
+        """Cost-free per-iteration step (chunk=1 path, off-grid
+        iterations of ``cost_every``)."""
+        if "per_step_light" not in self._compiled:
+            fn_light = self.step_fn_light
+
+            def light(d, rep, axes):
+                return fn_light(d, rep, axes), jnp.float32(0.0)
+
+            self._compiled["per_step_light"] = make_step(light,
+                                                         self.bundle)
+        return self._compiled["per_step_light"]
+
+    # ----------------------------------------------------- convergence
     def _converged(self) -> bool:
+        if not self.tol:
+            return False
         c = self.log.costs
-        w = self.cost_window
+        # when cost skipping is active the log repeats each evaluated
+        # objective; compare costs cost_window *evaluations* apart
+        w = self.cost_window * (self.cost_every if self._skips_cost
+                                else 1)
         if len(c) <= w:
             return False
         prev, cur = c[-w - 1], c[-1]
         return abs(prev - cur) <= self.tol * max(abs(prev), 1e-12)
 
+    # ------------------------------------------------------------- run
     def run(self, start_iter: int = 0) -> Bundle:
+        if self.chunk == 1:
+            return self._run_per_step(start_iter)
+        return self._run_chunked(start_iter)
+
+    @property
+    def _skips_cost(self) -> bool:
+        return self.cost_every > 1 and self.step_fn_light is not None
+
+    def _run_chunked(self, start_iter: int) -> Bundle:
+        data, rep = self.bundle.data, self.bundle.replicated
+        last = (init_out_like(self.step_fn, self.bundle)
+                if self._skips_cost else None)
+        ema = None
+        compiled_ks = set()
+        i = start_iter
+        while i < self.max_iter:
+            k = min(self.chunk, self.max_iter - i)
+            first_call = k not in compiled_ks
+            compiled_ks.add(k)
+            t0 = time.perf_counter()
+            if self._skips_cost:
+                data, rep, last, trace = self._scan_step(k)(
+                    data, rep, np.int32(i), last)
+            else:
+                data, rep, trace = self._scan_step(k)(data, rep,
+                                                      np.int32(i))
+            costs = trace["cost"] if isinstance(trace, dict) else trace
+            costs = np.asarray(jax.device_get(
+                jax.block_until_ready(costs)))
+            dt = time.perf_counter() - t0
+            self.log.times.extend([dt / k] * k)
+            self.log.costs.extend(float(c) for c in np.ravel(costs))
+            # a chunk length's first dispatch includes XLA compilation
+            # (e.g. the shorter tail program) — keep it out of the
+            # straggler watchdog and its EMA
+            if not first_call:
+                if ema is not None and dt > self.straggler_factor * ema:
+                    self.log.straggler_steps.append(i)
+                    if self.checkpoint_fn is not None:
+                        self.checkpoint_fn(
+                            self.bundle.with_data(data, replicated=rep),
+                            i + k - 1)
+                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            if (self.checkpoint_every and self.checkpoint_fn is not None
+                    and (i + k) // self.checkpoint_every
+                    > i // self.checkpoint_every):
+                self.checkpoint_fn(
+                    self.bundle.with_data(data, replicated=rep), i + k - 1)
+            i += k
+            if self._converged():
+                self.log.converged_at = i - 1
+                break
+        return self.bundle.with_data(data, replicated=rep)
+
+    def _run_per_step(self, start_iter: int) -> Bundle:
         data, rep = self.bundle.data, self.bundle.replicated
         ema = None
         for i in range(start_iter, self.max_iter):
             t0 = time.perf_counter()
-            data, cost = self.step(data, rep)
-            cost = jax.tree.map(lambda x: x.block_until_ready(), cost)
-            dt = time.perf_counter() - t0
-            self.log.times.append(dt)
-            self.log.costs.append(float(np.asarray(jax.device_get(
-                cost if not isinstance(cost, dict) else cost["cost"]))))
+            if self._skips_cost and i % self.cost_every != 0:
+                # off the cost grid: run the objective-free step and
+                # carry the last evaluated cost forward
+                data, _ = self._light_step(data, rep)
+                jax.block_until_ready(jax.tree.leaves(data)[0])
+                dt = time.perf_counter() - t0
+                self.log.times.append(dt)
+                self.log.costs.append(self.log.costs[-1]
+                                      if self.log.costs else float("inf"))
+            else:
+                data, out = self.step(data, rep)
+                cost = out["cost"] if isinstance(out, dict) else out
+                cost = cost.block_until_ready()
+                dt = time.perf_counter() - t0
+                self.log.times.append(dt)
+                self.log.costs.append(
+                    float(np.asarray(jax.device_get(cost))))
+                if self.update_replicated is not None:
+                    rep = self.update_replicated(rep, out)
             # straggler watchdog: a step far beyond the EMA is logged and
             # (in multi-host deployment) triggers an early checkpoint
             if ema is not None and dt > self.straggler_factor * ema:
                 self.log.straggler_steps.append(i)
                 if self.checkpoint_fn is not None:
-                    self.checkpoint_fn(self.bundle.with_data(data), i)
+                    self.checkpoint_fn(
+                        self.bundle.with_data(data, replicated=rep), i)
             ema = dt if ema is None else 0.9 * ema + 0.1 * dt
             if (self.checkpoint_every and self.checkpoint_fn is not None
                     and (i + 1) % self.checkpoint_every == 0):
-                self.checkpoint_fn(self.bundle.with_data(data), i)
+                self.checkpoint_fn(
+                    self.bundle.with_data(data, replicated=rep), i)
             if self._converged():
                 self.log.converged_at = i
                 break
-        return self.bundle.with_data(data)
+        return self.bundle.with_data(data, replicated=rep)

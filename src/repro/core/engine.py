@@ -12,15 +12,24 @@ partition (cost sums, Gram matrices, dictionary outer products) is a
 ``psum`` inside the step — the all-reduce that replaces Spark's driver
 round-trip.  The returned step is jit-compiled once and reused across
 iterations (Spark's lazy DAG -> XLA's staged graph).
+
+:func:`make_scan_step` goes one level further (DESIGN.md §12): K
+iterations are fused into ONE dispatch via ``jax.lax.scan`` inside the
+shard_map, carrying ``(data, replicated)`` on-device and accumulating a
+``(K,)`` cost buffer — the host only syncs once per chunk, removing the
+per-iteration driver round-trip that the paper identifies as Spark's
+dominant overhead.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.bundle import Bundle
+from repro.core.compat import shard_map
 
 
 def make_step(fn: Callable, bundle: Bundle, *, donate: bool = True,
@@ -51,7 +60,7 @@ def make_step(fn: Callable, bundle: Bundle, *, donate: bool = True,
     def local(data, rep):
         return fn(data, rep, axes)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local, mesh=bundle.mesh,
         in_specs=(data_spec, rep_spec),
         out_specs=(out_data_spec, out_rep_spec),
@@ -64,3 +73,115 @@ def _local_shapes(bundle: Bundle):
     return jax.tree.map(
         lambda x: jax.ShapeDtypeStruct((x.shape[0] // n,) + x.shape[1:],
                                        x.dtype), bundle.data)
+
+
+def _scalar_trace(out):
+    """The per-iteration trace kept by the fused scan: scalar leaves only
+    (costs/metrics).  Matrix-valued outputs (e.g. SCDL's dictionaries)
+    feed the replicated carry instead of being stacked K times."""
+    if isinstance(out, dict):
+        kept = {k: v for k, v in out.items() if jnp.ndim(v) == 0}
+        return kept if kept else out
+    return out
+
+
+def out_struct(fn: Callable, bundle: Bundle):
+    """Shape/dtype structure of ``fn``'s reduced output (the ``out`` of
+    ``fn(data_local, replicated, axes) -> (data', out)``)."""
+    _, shape = jax.eval_shape(lambda d, r: fn(d, r, ()),
+                              _local_shapes(bundle), bundle.replicated)
+    return shape
+
+
+def init_out_like(fn: Callable, bundle: Bundle):
+    """Initial carried output for a ``cost_every``-skipping scan step.
+
+    Float leaves are seeded with +inf (the log's "not yet evaluated"
+    convention — a resume landing off the cost grid then logs inf, which
+    can never fake convergence) and other dtypes with zeros."""
+    def seed(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jnp.full(s.shape, jnp.inf, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+    return jax.tree.map(seed, out_struct(fn, bundle))
+
+
+def make_scan_step(fn: Callable, bundle: Bundle, *, chunk: int = 8,
+                   donate: bool = True,
+                   update_replicated: Optional[Callable] = None,
+                   fn_light: Optional[Callable] = None,
+                   cost_every: int = 1):
+    """Fuse ``chunk`` iterations of ``fn`` into one on-device dispatch.
+
+    Compiles ``step(data, replicated, start) -> (data', replicated',
+    trace)`` where ``trace`` stacks the scalar leaves of ``fn``'s reduced
+    output into ``(chunk,)`` buffers.  ``start`` is the global iteration
+    index of the chunk's first iteration (drives ``cost_every`` phasing).
+
+    - ``update_replicated(replicated, out) -> replicated'`` folds each
+      iteration's reduced output back into the broadcast state *inside*
+      the scan carry — the paper's per-iteration driver broadcast (SCDL
+      step 7) without leaving the device.
+    - ``fn_light(data, replicated, axes) -> data'`` is the cost-free
+      variant of ``fn``; when given and ``cost_every > 1``, iterations
+      off the cost grid run it and carry the last computed output
+      forward instead of re-evaluating the objective.  The step then
+      takes a fourth argument and returns it updated — ``step(data,
+      replicated, start, last_out) -> (data', replicated', last_out',
+      trace)`` — so the carried output survives chunk boundaries (seed
+      it with :func:`init_out_like`; iteration 0 always evaluates).
+    """
+    axes = bundle.axes
+    use_light = fn_light is not None and cost_every > 1
+
+    def body(carry, i):
+        d, r, last = carry
+        if use_light:
+            d2, out = jax.lax.cond(
+                i % cost_every == 0,
+                lambda dd, rr, lo: fn(dd, rr, axes),
+                lambda dd, rr, lo: (fn_light(dd, rr, axes), lo),
+                d, r, last)
+            # apply the broadcast update only on evaluated iterations —
+            # ``out`` is the stale carry otherwise, and the per-step
+            # driver path skips the update there too
+            r2 = (jax.lax.cond(i % cost_every == 0,
+                               lambda: update_replicated(r, out),
+                               lambda: r)
+                  if update_replicated else r)
+        else:
+            d2, out = fn(d, r, axes)
+            r2 = update_replicated(r, out) if update_replicated else r
+        return (d2, r2, out), _scalar_trace(out)
+
+    if use_light:
+        def chunk_fn(data, rep, start, last):
+            (d, r, last2), trace = jax.lax.scan(
+                body, (data, rep, last), start + jnp.arange(chunk))
+            return d, r, last2, trace
+    else:
+        def chunk_fn(data, rep, start):
+            init = init_out_like(fn, bundle)      # never observed
+            (d, r, _), trace = jax.lax.scan(
+                body, (data, rep, init), start + jnp.arange(chunk))
+            return d, r, trace
+
+    if bundle.mesh is None:
+        return jax.jit(chunk_fn, donate_argnums=(0,) if donate else ())
+
+    out_shape = out_struct(fn, bundle)
+    data_spec = jax.tree.map(lambda _: bundle.record_spec(), bundle.data)
+    rep_spec = jax.tree.map(lambda _: P(), bundle.replicated)
+    out_spec = jax.tree.map(lambda _: P(), out_shape)
+    trace_spec = jax.tree.map(lambda _: P(), _scalar_trace(out_shape))
+    if use_light:
+        in_specs = (data_spec, rep_spec, P(), out_spec)
+        out_specs = (data_spec, rep_spec, out_spec, trace_spec)
+    else:
+        in_specs = (data_spec, rep_spec, P())
+        out_specs = (data_spec, rep_spec, trace_spec)
+
+    mapped = shard_map(
+        chunk_fn, mesh=bundle.mesh,
+        in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())

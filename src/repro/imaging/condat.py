@@ -10,11 +10,16 @@ Bundle/Unbundle components keep the core algorithm intact.
 
 Condat (2013) iterations with f = data term, g = positivity indicator,
 h o L the regulariser (L = Phi for sparse, L = I for low-rank).
+
+Hot-path structure (DESIGN.md §12): Phi/Phi^T run through the batched
+starlet kernel over the whole stack; the PSF kernel FFTs are computed
+once (``psf.psf_fft``) and H(X) is carried across iterations in the
+solver state, so each iteration runs exactly one forward and one
+adjoint convolution.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
@@ -23,6 +28,7 @@ import jax.numpy as jnp
 from repro.imaging import lowrank as lr
 from repro.imaging import psf as psf_op
 from repro.imaging import starlet
+from repro.kernels.starlet2d import ops as starlet_batch
 
 
 @dataclass(frozen=True)
@@ -41,6 +47,7 @@ class SolverConfig:
 class SolverState(NamedTuple):
     X: jax.Array                    # primal    (n, S, S)
     U: jax.Array                    # dual      (sparse: (J, n, S, S); lowrank: (n, S, S))
+    HX: jax.Array                   # carried H(X)  (n, S, S)
     cost: jax.Array                 # scalar
 
 
@@ -51,6 +58,18 @@ class SolverState(NamedTuple):
 def grad_data(X, Y, psfs):
     """grad of 0.5||Y - H(X)||^2 = H^T(H(X) - Y)."""
     return psf_op.Ht(psf_op.H(X, psfs) - Y, psfs)
+
+
+def grad_from_HX(HX, Y, psf_f):
+    """Same gradient with H(X) carried from the previous iteration and
+    the PSF kernel FFT precomputed: one inverse convolution instead of
+    two full ones."""
+    return psf_op.Ht_f(HX - Y, psf_f)
+
+
+def data_cost_from(HX, Y):
+    """0.5||Y - H(X)||_F^2 off the carried forward model — free."""
+    return 0.5 * jnp.sum((Y - HX) ** 2)
 
 
 def weight_matrix(psfs, sigma: float, n_scales: int, k_sigma: float):
@@ -67,19 +86,23 @@ def weight_matrix(psfs, sigma: float, n_scales: int, k_sigma: float):
 
 
 def sparse_dual_update(U, X_bar, W, sig, n_scales):
-    """prox of the conjugate of ||W o .||_1: clamp to [-W, W]."""
-    V = U + sig * jax.vmap(partial(starlet.forward, n_scales=n_scales))(
-        X_bar).swapaxes(0, 1)
+    """prox of the conjugate of ||W o .||_1: clamp to [-W, W].
+
+    Phi runs through the batched starlet kernel: the whole (n, S, S)
+    stack is one (scale-major) transform instead of n per-stamp
+    roll-cascades under vmap.
+    """
+    V = U + sig * starlet_batch.forward(X_bar, n_scales)
     return jnp.clip(V, -W, W)
 
 
 def sparse_dual_adjoint(U, n_scales):
-    return jax.vmap(partial(starlet.adjoint, n_scales=n_scales),
-                    in_axes=1)(U)
+    """Batched Phi^T over the dual stack: (J, n, S, S) -> (n, S, S)."""
+    return starlet_batch.adjoint(U, n_scales)
 
 
-def primal_update(X, U_adj, Y, psfs, tau):
-    X_new = X - tau * grad_data(X, Y, psfs) - tau * U_adj
+def primal_update(X, U_adj, grad, tau):
+    X_new = X - tau * grad - tau * U_adj
     return jnp.maximum(X_new, 0.0)                 # prox of X >= 0
 
 
@@ -88,8 +111,8 @@ def data_cost(X, Y, psfs):
 
 
 def sparse_reg_cost(X, W, n_scales):
-    C = jax.vmap(partial(starlet.forward, n_scales=n_scales))(X)
-    return jnp.sum(jnp.abs(W * C.swapaxes(0, 1)))
+    C = starlet_batch.forward(X, n_scales)          # (J, n, S, S)
+    return jnp.sum(jnp.abs(W * C))
 
 
 # ---------------------------------------------------------------------
@@ -111,37 +134,57 @@ def step_sizes(Y, psfs, cfg: SolverConfig, sigma_noise: float):
 
 def solve(Y, psfs, cfg: SolverConfig, sigma_noise: float = 0.02,
           n_iter: Optional[int] = None, cost_every: int = 1):
-    """Run the solver; returns (X*, cost history (max_iter,))."""
+    """Run the solver; returns (X*, cost history (max_iter,)).
+
+    ``cost_every``: evaluate the objective (a full starlet forward + PSF
+    convolution in sparse mode, an SVD in low-rank mode) only every k-th
+    iteration; skipped entries of the history carry the last evaluated
+    value forward.
+    """
     n_iter = n_iter or cfg.max_iter
+    cost_every = max(int(cost_every), 1)
     tau, sig, W = step_sizes(Y, psfs, cfg, sigma_noise)
-    X0 = psf_op.Ht(Y, psfs)
+    psf_f = psf_op.psf_fft(psfs)
+    X0 = psf_op.Ht_f(Y, psf_f)
+    HX0 = psf_op.H_f(X0, psf_f)
     if cfg.mode == "sparse":
         U0 = jnp.zeros((cfg.n_scales, Y.shape[0]) + Y.shape[1:])
     else:
         U0 = jnp.zeros_like(Y)
 
-    def step(state: SolverState, _):
+    def step(state: SolverState, i):
         X, U = state.X, state.U
         if cfg.mode == "sparse":
             U_adj = sparse_dual_adjoint(U, cfg.n_scales)
         else:
             U_adj = U
-        X_new = primal_update(X, U_adj, Y, psfs, tau)
+        grad = grad_from_HX(state.HX, Y, psf_f)
+        X_new = primal_update(X, U_adj, grad, tau)
         X_bar = 2 * X_new - X
+        HX_new = psf_op.H_f(X_new, psf_f)
         if cfg.mode == "sparse":
             U_new = sparse_dual_update(U, X_bar, W, sig, cfg.n_scales)
-            cost = data_cost(X_new, Y, psfs) + \
-                sparse_reg_cost(X_new, W, cfg.n_scales)
+
+            def eval_cost():
+                return data_cost_from(HX_new, Y) + \
+                    sparse_reg_cost(X_new, W, cfg.n_scales)
         else:
             V = U + sig * X_bar
             flat = (V / sig).reshape(V.shape[0], -1)
             U_new = V - sig * lr.svt(flat, cfg.lam / sig).reshape(V.shape)
-            s = jnp.linalg.svd(X_new.reshape(X_new.shape[0], -1),
-                               compute_uv=False)
-            cost = data_cost(X_new, Y, psfs) + cfg.lam * jnp.sum(s)
-        new = SolverState(X=X_new, U=U_new, cost=cost)
+
+            def eval_cost():
+                s = jnp.linalg.svd(X_new.reshape(X_new.shape[0], -1),
+                                   compute_uv=False)
+                return data_cost_from(HX_new, Y) + cfg.lam * jnp.sum(s)
+        if cost_every > 1:
+            cost = jax.lax.cond(i % cost_every == 0, eval_cost,
+                                lambda: state.cost)
+        else:
+            cost = eval_cost()
+        new = SolverState(X=X_new, U=U_new, HX=HX_new, cost=cost)
         return new, cost
 
-    init = SolverState(X=X0, U=U0, cost=jnp.float32(jnp.inf))
-    final, costs = jax.lax.scan(step, init, None, length=n_iter)
+    init = SolverState(X=X0, U=U0, HX=HX0, cost=jnp.float32(jnp.inf))
+    final, costs = jax.lax.scan(step, init, jnp.arange(n_iter))
     return final.X, costs

@@ -13,7 +13,10 @@ Mirrors the paper's pseudo-code line by line:
   12. save D / return X_p*                     -> gather()
 
 The per-record math is imported from ``condat`` unchanged — the paper's
-re-usability property of the Bundle/Unbundle design.
+re-usability property of the Bundle/Unbundle design.  The iteration loop
+itself runs chunked on-device (``chunk`` iterations per dispatch,
+DESIGN.md §12); ``make_light_step_fn`` is the cost-free step used to
+skip the objective evaluation off the ``cost_every`` grid.
 """
 from __future__ import annotations
 
@@ -28,18 +31,27 @@ from repro.core.driver import IterativeDriver
 from repro.imaging import lowrank as lr
 from repro.imaging import psf as psf_op
 from repro.imaging import starlet
-from repro.imaging.condat import (SolverConfig, data_cost, grad_data,
-                                  primal_update, sparse_dual_adjoint,
-                                  sparse_dual_update, sparse_reg_cost,
-                                  step_sizes)
+from repro.imaging.condat import (SolverConfig, data_cost_from,
+                                  grad_from_HX, primal_update,
+                                  sparse_dual_adjoint, sparse_dual_update,
+                                  sparse_reg_cost, step_sizes)
 
 
 def build_bundle(Y, psfs, cfg: SolverConfig, mesh=None,
                  sigma_noise: float = 0.02) -> Tuple[Bundle, dict]:
-    """Steps 1-5: parallelise + zip the inputs into the bundled RDD."""
+    """Steps 1-5: parallelise + zip the inputs into the bundled RDD.
+
+    Beyond the paper's five arrays, the bundle carries two derived
+    co-partitioned leaves that make each iteration cheaper: ``psf_f``
+    (the padded PSF kernel FFTs, constant across iterations) and ``HX``
+    (the forward model of the current primal, reused by the next
+    iteration's gradient so H runs once per iteration, not twice).
+    """
     tau, sig, W = step_sizes(Y, psfs, cfg, sigma_noise)
-    X0 = psf_op.Ht(Y, psfs)
-    data = {"Y": Y, "psf": psfs, "Xp": X0}
+    psf_f = psf_op.psf_fft(psfs)
+    X0 = psf_op.Ht_f(Y, psf_f)
+    data = {"Y": Y, "psf": psfs, "psf_f": psf_f, "Xp": X0,
+            "HX": psf_op.H_f(X0, psf_f)}
     if cfg.mode == "sparse":
         # step 3: the weighting blocks are a *map over the PSF blocks*;
         # stored record-major (n, J, 1, 1) so they co-partition with Y.
@@ -55,49 +67,75 @@ def build_bundle(Y, psfs, cfg: SolverConfig, mesh=None,
     return bundle, {"tau": tau, "sig": sig}
 
 
+def _sparse_update(d, rep, cfg: SolverConfig):
+    """Steps 7-8 (sparse): primal + dual updates, no cost."""
+    U = jnp.swapaxes(d["Xd"], 0, 1)               # (J, n_loc, S, S)
+    W = jnp.swapaxes(d["W"], 0, 1)
+    U_adj = sparse_dual_adjoint(U, cfg.n_scales)
+    grad = grad_from_HX(d["HX"], d["Y"], d["psf_f"])
+    X_new = primal_update(d["Xp"], U_adj, grad, rep["tau"])
+    X_bar = 2 * X_new - d["Xp"]
+    U_new = sparse_dual_update(U, X_bar, W, rep["sig"], cfg.n_scales)
+    return dict(d, Xp=X_new, Xd=jnp.swapaxes(U_new, 0, 1),
+                HX=psf_op.H_f(X_new, d["psf_f"])), W
+
+
+def _lowrank_update(d, rep, axes, cfg: SolverConfig):
+    """Steps 7-8 (low-rank): primal update + distributed randomized SVT."""
+    U, sig = d["Xd"], rep["sig"]
+    grad = grad_from_HX(d["HX"], d["Y"], d["psf_f"])
+    X_new = primal_update(d["Xp"], U, grad, rep["tau"])
+    X_bar = 2 * X_new - d["Xp"]
+    V = U + sig * X_bar
+    flat = (V / sig).reshape(V.shape[0], -1)
+    svt_flat = lr.randomized_svt_local(
+        flat, rep["omega"], cfg.lam / sig, axes=axes or None)
+    U_new = V - sig * svt_flat.reshape(V.shape)
+    return dict(d, Xp=X_new, Xd=U_new,
+                HX=psf_op.H_f(X_new, d["psf_f"]))
+
+
 def make_step_fn(cfg: SolverConfig):
     """The per-partition iteration (steps 7-9): identical math to the
     sequential solver; ``axes`` carries the psum targets."""
 
     def step(d, rep, axes):
-        Y, psfs, Xp = d["Y"], d["psf"], d["Xp"]
-        tau, sig = rep["tau"], rep["sig"]
         if cfg.mode == "sparse":
-            U = jnp.swapaxes(d["Xd"], 0, 1)           # (J, n_loc, S, S)
-            W = jnp.swapaxes(d["W"], 0, 1)
-            U_adj = sparse_dual_adjoint(U, cfg.n_scales)
-            X_new = primal_update(Xp, U_adj, Y, psfs, tau)
-            X_bar = 2 * X_new - Xp
-            U_new = sparse_dual_update(U, X_bar, W, sig, cfg.n_scales)
-            cost_part = data_cost(X_new, Y, psfs) + \
-                sparse_reg_cost(X_new, W, cfg.n_scales)
-            d_new = dict(d, Xp=X_new, Xd=jnp.swapaxes(U_new, 0, 1))
-        else:
-            U = d["Xd"]
-            X_new = primal_update(Xp, U, Y, psfs, tau)
-            X_bar = 2 * X_new - Xp
-            V = U + sig * X_bar
-            flat = (V / sig).reshape(V.shape[0], -1)
-            svt_flat = lr.randomized_svt_local(
-                flat, rep["omega"], cfg.lam / sig, axes=axes or None)
-            U_new = V - sig * svt_flat.reshape(V.shape)
-            # nuclear-norm cost via the same range finder (replicated SVD
-            # of the small projected matrix)
-            xf = X_new.reshape(X_new.shape[0], -1)
-            y = xf @ rep["omega"]
-            gram = y.T @ y
-            if axes:
-                gram = jax.lax.psum(gram, axes)
-            s2 = jnp.linalg.eigvalsh(gram)
-            nuc = jnp.sum(jnp.sqrt(jnp.maximum(s2, 0.0)))
-            cost_part = data_cost(X_new, Y, psfs)
-            d_new = dict(d, Xp=X_new, Xd=U_new)
+            d_new, W = _sparse_update(d, rep, cfg)
+            cost_part = data_cost_from(d_new["HX"], d["Y"]) + \
+                sparse_reg_cost(d_new["Xp"], W, cfg.n_scales)
             if axes:
                 cost_part = jax.lax.psum(cost_part, axes)
-            return d_new, {"cost": cost_part + cfg.lam * nuc}
+            return d_new, {"cost": cost_part}
+        d_new = _lowrank_update(d, rep, axes, cfg)
+        # nuclear-norm cost via the same range finder (replicated SVD
+        # of the small projected matrix)
+        xf = d_new["Xp"].reshape(d_new["Xp"].shape[0], -1)
+        y = xf @ rep["omega"]
+        gram = y.T @ y
+        if axes:
+            gram = jax.lax.psum(gram, axes)
+        s2 = jnp.linalg.eigvalsh(gram)
+        nuc = jnp.sum(jnp.sqrt(jnp.maximum(s2, 0.0)))
+        cost_part = data_cost_from(d_new["HX"], d["Y"])
         if axes:
             cost_part = jax.lax.psum(cost_part, axes)
-        return d_new, {"cost": cost_part}
+        return d_new, {"cost": cost_part + cfg.lam * nuc}
+
+    return step
+
+
+def make_light_step_fn(cfg: SolverConfig):
+    """The same iteration without the objective evaluation — the
+    ``cost_every`` fast path (skips a full starlet forward + PSF
+    convolution per record in sparse mode, a Gram eigendecomposition in
+    low-rank mode)."""
+
+    def step(d, rep, axes):
+        if cfg.mode == "sparse":
+            d_new, _ = _sparse_update(d, rep, cfg)
+            return d_new
+        return _lowrank_update(d, rep, axes, cfg)
 
     return step
 
@@ -105,12 +143,16 @@ def make_step_fn(cfg: SolverConfig):
 def deconvolve(Y, psfs, cfg: SolverConfig, mesh=None,
                sigma_noise: float = 0.02,
                max_iter: Optional[int] = None,
-               tol: Optional[float] = None):
+               tol: Optional[float] = None,
+               chunk: int = 8, cost_every: int = 1):
     """End-to-end Algorithm 1. Returns (X*, driver log)."""
     bundle, _ = build_bundle(Y, psfs, cfg, mesh=mesh,
                              sigma_noise=sigma_noise)
     driver = IterativeDriver(
         make_step_fn(cfg), bundle,
-        max_iter=max_iter or cfg.max_iter, tol=tol or cfg.tol)
+        max_iter=max_iter or cfg.max_iter,
+        tol=cfg.tol if tol is None else tol,
+        chunk=chunk, cost_every=cost_every,
+        step_fn_light=make_light_step_fn(cfg))
     out = driver.run()
     return gather(out)["Xp"], driver.log

@@ -33,7 +33,6 @@ import jax.numpy as jnp
 
 from repro.core.bundle import Bundle, bundle_map_reduce, gather
 from repro.core.driver import IterativeDriver
-from repro.core.engine import make_step
 
 
 @dataclass(frozen=True)
@@ -160,35 +159,22 @@ def make_step_fn(cfg: SCDLConfig):
     return step
 
 
-class SCDLDriver(IterativeDriver):
-    """IterativeDriver whose replicated state (the dictionaries) is
-    refreshed from each step's reduced output — the per-iteration
-    broadcast of step 7."""
-
-    def run(self, start_iter: int = 0):
-        import numpy as np
-        import time
-        data, rep = self.bundle.data, dict(self.bundle.replicated)
-        for i in range(start_iter, self.max_iter):
-            t0 = time.perf_counter()
-            data, out = self.step(data, rep)
-            cost = float(np.asarray(jax.device_get(out["cost"])))
-            self.log.times.append(time.perf_counter() - t0)
-            self.log.costs.append(cost)
-            rep = {"Xh": out["Xh"], "Xl": out["Xl"]}
-            if self.tol and self._converged():
-                self.log.converged_at = i
-                break
-        self.final_rep = rep
-        return self.bundle.with_data(data, replicated=rep)
+def refresh_dicts(rep, out):
+    """Step 7's per-iteration broadcast: fold the reduced dictionary
+    update back into the replicated state.  Runs inside the fused scan
+    carry (``core.engine.make_scan_step``), so the dictionaries never
+    leave the device between iterations."""
+    return {"Xh": out["Xh"], "Xl": out["Xl"]}
 
 
 def train(S_h, S_l, cfg: SCDLConfig, mesh=None, key=None,
-          max_iter: Optional[int] = None):
+          max_iter: Optional[int] = None, chunk: int = 8):
     """End-to-end Algorithm 2. Returns (X_h*, X_l*, log)."""
     bundle = build_bundle(S_h, S_l, cfg, mesh=mesh, key=key)
-    driver = SCDLDriver(make_step_fn(cfg), bundle,
-                        max_iter=max_iter or cfg.max_iter, tol=cfg.tol)
+    driver = IterativeDriver(make_step_fn(cfg), bundle,
+                             max_iter=max_iter or cfg.max_iter,
+                             tol=cfg.tol, chunk=chunk,
+                             update_replicated=refresh_dicts)
     out = driver.run()
     Xh = jax.device_get(out.replicated["Xh"])
     Xl = jax.device_get(out.replicated["Xl"])

@@ -68,15 +68,19 @@ def adjoint(coeffs: jax.Array, n_scales: int) -> jax.Array:
     forward_j = (prod_{i<j} H_i)(I - H_j), all H_i self-adjoint under
     periodic boundaries, so adjoint_j = (I - H_j)(prod_{i<j} H_i) applied
     in reverse order of composition.
+
+    Evaluated Horner-style: with v_j = (I - H_j) w_j,
+
+        Phi^T w = v_0 + H_0 (v_1 + H_1 (v_2 + ... H_{J-2} v_{J-1}))
+
+    which shares the cumulative smoothing products across scales —
+    2J - 1 smoothing passes instead of the naive J(J+1)/2.
     """
-    out = jnp.zeros_like(coeffs[0])
-    for j in range(n_scales - 1, -1, -1):
-        w = coeffs[j]
-        w = w - smooth(w, j)                 # (I - H_j)^T = (I - H_j)
-        for i in range(j - 1, -1, -1):       # (prod_{i<j} H_i)^T reversed
-            w = smooth(w, i)
-        out = out + w
-    return out
+    acc = coeffs[n_scales - 1] - smooth(coeffs[n_scales - 1], n_scales - 1)
+    for j in range(n_scales - 2, -1, -1):
+        v = coeffs[j] - smooth(coeffs[j], j)
+        acc = v + smooth(acc, j)
+    return acc
 
 
 def spectral_norm(n_scales: int, shape=(41, 41), iters: int = 30,

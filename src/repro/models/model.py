@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import shard_map
 from repro.configs.base import (LAYER_GLOBAL, LAYER_HYBRID, LAYER_LOCAL,
                                 LAYER_MAMBA, ModelConfig)
 from repro.models import moe as moe_lib
@@ -192,7 +193,7 @@ def _ffn_apply(lp, x, cfg: ModelConfig, rules: MeshRules):
         rep = lambda a: None if a is None else P(*([None] * a.ndim))
         in_specs = (P(dp, None), rep(p.router), rep(p.we1), rep(p.we3),
                     rep(p.we2), rep(p.ws1), rep(p.ws3), rep(p.ws2))
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             local_fn, mesh=rules.mesh, in_specs=in_specs,
             out_specs=(P(dp, None), P()), check_vma=False)(
             tokens, p.router, p.we1, p.we3, p.we2, p.ws1, p.ws3, p.ws2)
@@ -217,7 +218,7 @@ def _ffn_apply(lp, x, cfg: ModelConfig, rules: MeshRules):
                 P(None, t) if p.ws3 is not None else None,
                 P(t, None) if p.ws2 is not None else None)
     out_specs = (P(dp, None), P())
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False)(tokens, p.router, p.we1, p.we3, p.we2,
                          p.ws1, p.ws3, p.ws2)

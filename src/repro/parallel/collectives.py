@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import axis_size
+
 
 def hierarchical_psum_local(x, *, pod_axis: str = "pod",
                             data_axis: str = "data"):
@@ -36,7 +38,7 @@ def hierarchical_psum_local(x, *, pod_axis: str = "pod",
     link carries 1/data_size of the tensor.
     """
     n = x.shape[0]
-    data_size = jax.lax.axis_size(data_axis)
+    data_size = axis_size(data_axis)
     if n % data_size == 0:
         shard = jax.lax.psum_scatter(x, data_axis, scatter_dimension=0,
                                      tiled=True)
@@ -64,7 +66,7 @@ def compressed_cross_pod_mean(x, error, *, pod_axis: str = "pod"):
     is added back to next step's tensor before quantising — standard
     error feedback.
     """
-    pod_size = jax.lax.axis_size(pod_axis)
+    pod_size = axis_size(pod_axis)
     corrected = x + error
     q, scale = quantize_int8(corrected)
     decoded = dequantize_int8(q, scale)

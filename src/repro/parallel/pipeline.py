@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import axis_size, shard_map
+
 
 def pipeline_apply(layer_fn: Callable, stage_params, x_micro, *,
                    stage_axis: str = "stage"):
@@ -39,7 +41,7 @@ def pipeline_apply(layer_fn: Callable, stage_params, x_micro, *,
     Returns (M, mb, ...) outputs as produced by the LAST stage, rolled
     back into order.
     """
-    n_stage = jax.lax.axis_size(stage_axis)
+    n_stage = axis_size(stage_axis)
     stage_id = jax.lax.axis_index(stage_axis)
     M = x_micro.shape[0]
     mb_shape = x_micro.shape[1:]
@@ -96,7 +98,7 @@ def make_pipelined_forward(layer_fn: Callable, mesh: Mesh, *,
 
         pspec = jax.tree.map(lambda _: P(stage_axis), params_staged)
         xspec = P(data_axes)
-        return jax.shard_map(local, mesh=mesh,
+        return shard_map(local, mesh=mesh,
                              in_specs=(pspec, xspec),
                              out_specs=xspec, check_vma=False)(
             params_staged, x)

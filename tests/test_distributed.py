@@ -146,6 +146,7 @@ def test_hierarchical_psum_and_compression():
     run_sub("""
     from functools import partial
     from jax.sharding import PartitionSpec as P
+    from repro.core.compat import shard_map
     from repro.parallel.collectives import (CompressedReducer,
                                             hierarchical_psum_local)
     mesh = make_mesh((2, 4), ("pod", "data"))
@@ -157,7 +158,7 @@ def test_hierarchical_psum_and_compression():
     def hier(xl):
         return hierarchical_psum_local(xl, pod_axis="pod", data_axis="data")
 
-    sm = partial(jax.shard_map, mesh=mesh, in_specs=(P(("pod", "data")),),
+    sm = partial(shard_map, mesh=mesh, in_specs=(P(("pod", "data")),),
                  out_specs=P(("pod", "data")), check_vma=False)
     np.testing.assert_allclose(np.asarray(sm(flat)(x)),
                                np.asarray(sm(hier)(x)), rtol=1e-5)
