@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.core.bundle import Bundle
 from repro.core.driver import IterativeDriver
 from repro.imaging import psf as psf_op
@@ -111,7 +111,7 @@ def run(n: int = 256, iters: int = 96, smoke: bool = False) -> None:
     variants = [("seed_per_step", 1, True)]
     variants += [("per_step" if c == 1 else f"chunk{c}", c, False)
                  for c in CHUNKS]
-    results = {}
+    results, records = {}, []
     for label, chunk, seed_math in variants:
         driver = _drive(data, cfg, iters, chunk, seed_math=seed_math)
         np.testing.assert_allclose(np.asarray(driver.log.costs),
@@ -127,9 +127,11 @@ def run(n: int = 256, iters: int = 96, smoke: bool = False) -> None:
         }
         if "per_step" in results and label.startswith("chunk"):
             rec["vs_per_step"] = round(us / results["per_step"], 3)
+        records.append(rec)
         print("BENCH " + json.dumps(rec), flush=True)
         emit(f"driver/sparse_n{n}_{label}", us,
              f"x_seed={us / base:.3f}")
+    write_bench_json("BENCH_driver.json", records)
 
 
 if __name__ == "__main__":

@@ -30,3 +30,13 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5,
 
 def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def write_bench_json(path: str, records) -> None:
+    """Persist a benchmark table's BENCH records (list of dicts) as a
+    ``BENCH_*.json`` file next to the CSV output — CI uploads these as
+    workflow artifacts so the perf trajectory survives the run log."""
+    import json
+    with open(path, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"# wrote {path}", flush=True)

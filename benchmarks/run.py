@@ -29,7 +29,7 @@ def main() -> None:
         _run(bench_psf.run, "psf", failures)
     if "scdl" in wanted:
         from benchmarks import bench_scdl
-        _run(bench_scdl.run, "scdl", failures)
+        _run(lambda: bench_scdl.run(smoke=args.smoke), "scdl", failures)
     if "memory" in wanted:
         from benchmarks import bench_memory
         _run(bench_memory.run, "memory", failures)

@@ -28,7 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bundle import Bundle
-from repro.core.engine import init_out_like, make_scan_step, make_step
+from repro.core.engine import (init_cost_like, init_out_like,
+                               make_chunk_cost_step, make_scan_step,
+                               make_step)
 
 
 @dataclass
@@ -63,11 +65,15 @@ class IterativeDriver:
                  chunk: int = 8,
                  cost_every: int = 1,
                  update_replicated: Optional[Callable] = None,
-                 step_fn_light: Optional[Callable] = None):
+                 step_fn_light: Optional[Callable] = None,
+                 light_updates_replicated: bool = False,
+                 step_fn_cost: Optional[Callable] = None):
         self.bundle = bundle
         self.step_fn = step_fn
         self.step_fn_light = step_fn_light
+        self.step_fn_cost = step_fn_cost
         self.update_replicated = update_replicated
+        self.light_updates_replicated = light_updates_replicated
         self.max_iter = max_iter
         self.tol = tol
         self.cost_window = cost_window
@@ -85,10 +91,17 @@ class IterativeDriver:
         length (the tail chunk of a run compiles a second, shorter
         program)."""
         if k not in self._compiled:
-            self._compiled[k] = make_scan_step(
-                self.step_fn, self.bundle, chunk=k,
-                update_replicated=self.update_replicated,
-                fn_light=self.step_fn_light, cost_every=self.cost_every)
+            if self._cost_per_chunk:
+                self._compiled[k] = make_chunk_cost_step(
+                    self.step_fn_light, self.step_fn_cost, self.bundle,
+                    chunk=k, update_replicated=self.update_replicated)
+            else:
+                self._compiled[k] = make_scan_step(
+                    self.step_fn, self.bundle, chunk=k,
+                    update_replicated=self.update_replicated,
+                    fn_light=self.step_fn_light,
+                    cost_every=self.cost_every,
+                    light_updates_replicated=self.light_updates_replicated)
         return self._compiled[k]
 
     @property
@@ -102,12 +115,17 @@ class IterativeDriver:
     @property
     def _light_step(self) -> Callable:
         """Cost-free per-iteration step (chunk=1 path, off-grid
-        iterations of ``cost_every``)."""
+        iterations of ``cost_every``).  When the light step feeds the
+        broadcast update (``light_updates_replicated``) it already has
+        the ``(data', out)`` shape ``make_step`` expects; otherwise wrap
+        its bare data return with a dummy scalar."""
         if "per_step_light" not in self._compiled:
             fn_light = self.step_fn_light
-
-            def light(d, rep, axes):
-                return fn_light(d, rep, axes), jnp.float32(0.0)
+            if self.light_updates_replicated:
+                light = fn_light
+            else:
+                def light(d, rep, axes):
+                    return fn_light(d, rep, axes), jnp.float32(0.0)
 
             self._compiled["per_step_light"] = make_step(light,
                                                          self.bundle)
@@ -120,8 +138,9 @@ class IterativeDriver:
         c = self.log.costs
         # when cost skipping is active the log repeats each evaluated
         # objective; compare costs cost_window *evaluations* apart
-        w = self.cost_window * (self.cost_every if self._skips_cost
-                                else 1)
+        stride = (self.chunk if self._cost_per_chunk
+                  else self.cost_every if self._skips_cost else 1)
+        w = self.cost_window * stride
         if len(c) <= w:
             return False
         prev, cur = c[-w - 1], c[-1]
@@ -137,9 +156,23 @@ class IterativeDriver:
     def _skips_cost(self) -> bool:
         return self.cost_every > 1 and self.step_fn_light is not None
 
+    @property
+    def _cost_per_chunk(self) -> bool:
+        """Chunk-granular objective (``engine.make_chunk_cost_step``):
+        the scan runs only the cost-free step and the objective is
+        evaluated once per dispatch, on the chunk's final state.
+        Requires the light step to feed the broadcast update and a
+        standalone objective function; per-step runs (chunk=1) evaluate
+        every iteration anyway, so they use the plain path."""
+        return (self.step_fn_cost is not None
+                and self.step_fn_light is not None
+                and self.chunk > 1)
+
     def _run_chunked(self, start_iter: int) -> Bundle:
         data, rep = self.bundle.data, self.bundle.replicated
-        last = (init_out_like(self.step_fn, self.bundle)
+        last = (init_cost_like(self.step_fn_cost, self.bundle)
+                if self._cost_per_chunk
+                else init_out_like(self.step_fn, self.bundle)
                 if self._skips_cost else None)
         ema = None
         compiled_ks = set()
@@ -149,7 +182,7 @@ class IterativeDriver:
             first_call = k not in compiled_ks
             compiled_ks.add(k)
             t0 = time.perf_counter()
-            if self._skips_cost:
+            if self._cost_per_chunk or self._skips_cost:
                 data, rep, last, trace = self._scan_step(k)(
                     data, rep, np.int32(i), last)
             else:
@@ -191,7 +224,10 @@ class IterativeDriver:
             if self._skips_cost and i % self.cost_every != 0:
                 # off the cost grid: run the objective-free step and
                 # carry the last evaluated cost forward
-                data, _ = self._light_step(data, rep)
+                data, aux = self._light_step(data, rep)
+                if self.light_updates_replicated and \
+                        self.update_replicated is not None:
+                    rep = self.update_replicated(rep, aux)
                 jax.block_until_ready(jax.tree.leaves(data)[0])
                 dt = time.perf_counter() - t0
                 self.log.times.append(dt)

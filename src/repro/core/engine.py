@@ -93,24 +93,36 @@ def out_struct(fn: Callable, bundle: Bundle):
     return shape
 
 
-def init_out_like(fn: Callable, bundle: Bundle):
-    """Initial carried output for a ``cost_every``-skipping scan step.
-
-    Float leaves are seeded with +inf (the log's "not yet evaluated"
-    convention — a resume landing off the cost grid then logs inf, which
-    can never fake convergence) and other dtypes with zeros."""
+def _seed_like(shapes):
+    """Seed a shape tree with the "not yet evaluated" convention: float
+    leaves get +inf (a resume landing off the cost grid then logs inf,
+    which can never fake convergence), other dtypes zeros."""
     def seed(s):
         if jnp.issubdtype(s.dtype, jnp.floating):
             return jnp.full(s.shape, jnp.inf, s.dtype)
         return jnp.zeros(s.shape, s.dtype)
-    return jax.tree.map(seed, out_struct(fn, bundle))
+    return jax.tree.map(seed, shapes)
+
+
+def init_out_like(fn: Callable, bundle: Bundle):
+    """Initial carried output for a ``cost_every``-skipping scan step."""
+    return _seed_like(out_struct(fn, bundle))
+
+
+def init_cost_like(fn_cost: Callable, bundle: Bundle):
+    """Initial carried objective for the per-chunk cost mode:
+    ``fn_cost(data_local, replicated, axes) -> out`` (no data return)."""
+    return _seed_like(jax.eval_shape(lambda d, r: fn_cost(d, r, ()),
+                                     _local_shapes(bundle),
+                                     bundle.replicated))
 
 
 def make_scan_step(fn: Callable, bundle: Bundle, *, chunk: int = 8,
                    donate: bool = True,
                    update_replicated: Optional[Callable] = None,
                    fn_light: Optional[Callable] = None,
-                   cost_every: int = 1):
+                   cost_every: int = 1,
+                   light_updates_replicated: bool = False):
     """Fuse ``chunk`` iterations of ``fn`` into one on-device dispatch.
 
     Compiles ``step(data, replicated, start) -> (data', replicated',
@@ -121,7 +133,10 @@ def make_scan_step(fn: Callable, bundle: Bundle, *, chunk: int = 8,
     - ``update_replicated(replicated, out) -> replicated'`` folds each
       iteration's reduced output back into the broadcast state *inside*
       the scan carry — the paper's per-iteration driver broadcast (SCDL
-      step 7) without leaving the device.
+      step 7) without leaving the device.  The hook may post-process the
+      reduced output (e.g. factor the SCDL Gram matrices into broadcast
+      solve operators, DESIGN.md §13) — its result replaces the whole
+      replicated carry.
     - ``fn_light(data, replicated, axes) -> data'`` is the cost-free
       variant of ``fn``; when given and ``cost_every > 1``, iterations
       off the cost grid run it and carry the last computed output
@@ -130,13 +145,32 @@ def make_scan_step(fn: Callable, bundle: Bundle, *, chunk: int = 8,
       replicated, start, last_out) -> (data', replicated', last_out',
       trace)`` — so the carried output survives chunk boundaries (seed
       it with :func:`init_out_like`; iteration 0 always evaluates).
+    - ``light_updates_replicated=True`` declares that the broadcast
+      state must advance on *every* iteration, not just evaluated ones
+      (SCDL's dictionary update is part of the iterate, not of the
+      objective).  ``fn_light`` then returns ``(data', out_partial)``
+      where ``out_partial`` is a dict holding the subset of ``fn``'s
+      output keys that feed ``update_replicated``; off-grid iterations
+      merge it over the carried output (fresh broadcast inputs, stale
+      scalars) and apply the hook unconditionally.
     """
     axes = bundle.axes
     use_light = fn_light is not None and cost_every > 1
 
     def body(carry, i):
         d, r, last = carry
-        if use_light:
+        if use_light and light_updates_replicated:
+            def on_grid(dd, rr, lo):
+                return fn(dd, rr, axes)
+
+            def off_grid(dd, rr, lo):
+                d2, aux = fn_light(dd, rr, axes)
+                return d2, {**lo, **aux}
+
+            d2, out = jax.lax.cond(i % cost_every == 0,
+                                   on_grid, off_grid, d, r, last)
+            r2 = update_replicated(r, out) if update_replicated else r
+        elif use_light:
             d2, out = jax.lax.cond(
                 i % cost_every == 0,
                 lambda dd, rr, lo: fn(dd, rr, axes),
@@ -184,4 +218,61 @@ def make_scan_step(fn: Callable, bundle: Bundle, *, chunk: int = 8,
     mapped = shard_map(
         chunk_fn, mesh=bundle.mesh,
         in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+
+
+def make_chunk_cost_step(fn_light: Callable, fn_cost: Callable,
+                         bundle: Bundle, *, chunk: int = 8,
+                         donate: bool = True,
+                         update_replicated: Optional[Callable] = None):
+    """Chunk-granular objective: the fastest execution mode (DESIGN.md
+    §13).  The scan body runs ONLY the cost-free step — no ``lax.cond``,
+    no stale-output carry threading through the scan — and the objective
+    is evaluated once per dispatch, on the chunk's final state.  That is
+    exactly the granularity the host observes anyway: the driver syncs
+    and checks convergence once per chunk.
+
+    - ``fn_light(data, replicated, axes) -> (data', out_partial)`` with
+      ``out_partial`` feeding ``update_replicated`` every iteration (the
+      ``light_updates_replicated`` contract).
+    - ``fn_cost(data, replicated, axes) -> out`` evaluates the objective
+      scalars from the *post-iteration* state (the broadcast carry holds
+      the iteration's reduced results).
+
+    Compiles ``step(data, replicated, start, last) -> (data',
+    replicated', out, trace)`` where ``trace`` holds ``last`` (the
+    previous chunk's objective, +inf before the first evaluation —
+    :func:`init_cost_like`) for the first ``chunk - 1`` slots and the
+    fresh objective in the last slot.
+    """
+    axes = bundle.axes
+
+    def body(carry, _):
+        d, r = carry
+        d2, aux = fn_light(d, r, axes)
+        r2 = update_replicated(r, aux) if update_replicated else r
+        return (d2, r2), None
+
+    def chunk_fn(data, rep, start, last):
+        (d, r), _ = jax.lax.scan(body, (data, rep), None, length=chunk)
+        fresh = fn_cost(d, r, axes)
+        trace = jax.tree.map(
+            lambda s, f: jnp.concatenate(
+                [jnp.broadcast_to(s, (chunk - 1,) + jnp.shape(s)),
+                 jnp.asarray(f)[None]]), last, fresh)
+        return d, r, fresh, trace
+
+    if bundle.mesh is None:
+        return jax.jit(chunk_fn, donate_argnums=(0,) if donate else ())
+
+    cost_shape = jax.eval_shape(lambda d, r: fn_cost(d, r, ()),
+                                _local_shapes(bundle), bundle.replicated)
+    data_spec = jax.tree.map(lambda _: bundle.record_spec(), bundle.data)
+    rep_spec = jax.tree.map(lambda _: P(), bundle.replicated)
+    cost_spec = jax.tree.map(lambda _: P(), cost_shape)
+    mapped = shard_map(
+        chunk_fn, mesh=bundle.mesh,
+        in_specs=(data_spec, rep_spec, P(), cost_spec),
+        out_specs=(data_spec, rep_spec, cost_spec, cost_spec),
+        check_vma=False)
     return jax.jit(mapped, donate_argnums=(0,) if donate else ())

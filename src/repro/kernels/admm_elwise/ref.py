@@ -1,0 +1,43 @@
+"""Oracle for the fused SCDL ADMM elementwise tail (Algorithm 2, step 8):
+given fresh codes Wh/Wl (K, A) and the stacked multiplier state
+``YZ = [Y1, Y2, Y3, Z1, Z2]`` (K, 5, A), soft-threshold the splitting
+variables and take the three dual ascent steps:
+
+    P  = soft(Wh - Y1/c1, t1),  t1 = lam_h/c1
+    Q  = soft(Wl - Y2/c2, t2),  t2 = lam_l/c2
+    Y1 = Y1 + c1 (P - Wh)
+    Y2 = Y2 + c2 (Q - Wl)
+    Y3 = Y3 + c3 (Wh - Wl)
+
+P and Q are consumed by the next iteration's W solves only through the
+right-hand-side combinations, so instead of the raw splitting variables
+the state carries those directly (with the updated multipliers and the
+fresh codes folded in):
+
+    Z1 = c1 P + Y1 - Y3 + c3 Wl      (everything rhs_h needs besides S)
+    Z2 = c2 Q + Y2 + Y3              (rhs_l adds c3 Wh_fresh itself)
+
+Returns the updated (K, 5, A) stack.  Keeping the five planes in ONE
+array matters beyond the TPU kernel: XLA fuses the whole tail into a
+single output loop (one write) instead of five separately-rooted
+fusions that re-read their shared inputs.  Accumulation in fp32, result
+cast back to the input dtype (the kernel contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def admm_elwise_ref(Wh, Wl, YZ, *, c1, c2, c3, t1, t2):
+    # with soft(V, t) = V - clip(V, -t, t) and V1 = Wh - Y1/c1, the dual
+    # step collapses: Y1' = Y1 + c1 (soft(V1) - Wh) = -c1 clip(V1), and
+    # c1 P = (c1 Wh - Y1) + Y1' — so the whole tail is clamps and axpys
+    dt = YZ.dtype
+    wh, wl = Wh.astype(jnp.float32), Wl.astype(jnp.float32)
+    yz = YZ.astype(jnp.float32)
+    y1, y2, y3 = yz[:, 0], yz[:, 1], yz[:, 2]
+    Y1n = -c1 * jnp.clip(wh - y1 / c1, -t1, t1)
+    Y2n = -c2 * jnp.clip(wl - y2 / c2, -t2, t2)
+    Y3n = y3 + c3 * (wh - wl)
+    Z1 = (c1 * wh - y1) + 2.0 * Y1n - Y3n + c3 * wl
+    Z2 = (c2 * wl - y2) + 2.0 * Y2n + Y3n
+    return jnp.stack([Y1n, Y2n, Y3n, Z1, Z2], axis=1).astype(dt)

@@ -1,0 +1,24 @@
+"""Shared helpers for the Pallas kernel wrappers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def auto_interpret() -> bool:
+    """Compile the Mosaic kernel on TPU; fall back to interpreter mode
+    everywhere else (CPU/GPU hosts run the same traced jnp ops)."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_leading(arrays, block: int):
+    """Zero-pad a shared leading axis to a whole number of ``block``
+    rows (pad rows are inert for the kernels using this: they produce
+    pad rows or contribute zero to accumulators).  Returns the padded
+    list and the padded length."""
+    n = arrays[0].shape[0]
+    pad = -n % block
+    if pad:
+        arrays = [jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]) for a in arrays]
+    return arrays, n + pad

@@ -1,17 +1,39 @@
-"""Jitted public wrapper for the fused dictionary outer products."""
+"""Jitted public wrappers for the fused dictionary outer products.
+
+``use_kernel=None`` auto-selects: the Pallas kernel where it compiles to
+Mosaic (TPU), the pure-jnp oracle elsewhere — on CPU/GPU hosts XLA's own
+GEMM fusion beats running the kernel through the interpreter inside the
+training scan.  Tests pass ``use_kernel=True`` to exercise the kernel in
+interpreter mode on any backend.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from repro.kernels.dict_outer.kernel import dict_outer_fwd
-from repro.kernels.dict_outer.ref import dict_outer_ref
+from repro.kernels.dict_outer.kernel import (auto_interpret, dict_outer_fwd,
+                                             dict_outer_pair_fwd)
+from repro.kernels.dict_outer.ref import dict_outer_pair_ref, dict_outer_ref
 
 
 @partial(jax.jit, static_argnames=("use_kernel", "block_k", "interpret"))
-def dict_outer(S, W, *, use_kernel: bool = True, block_k: int = 512,
-               interpret: bool = True):
+def dict_outer(S, W, *, use_kernel=None, block_k: int = 512,
+               interpret=None):
+    if use_kernel is None:
+        use_kernel = not auto_interpret()
     if not use_kernel:
         return dict_outer_ref(S, W)
     return dict_outer_fwd(S, W, block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_k", "interpret"))
+def dict_outer_pair(Sh, Sl, Wh, Wl, *, use_kernel=None,
+                    block_k: int = 512, interpret=None):
+    """One pass over the coupled pair: (Sh^T Wh, Sl^T Wl, phi_h, phi_l)."""
+    if use_kernel is None:
+        use_kernel = not auto_interpret()
+    if not use_kernel:
+        return dict_outer_pair_ref(Sh, Sl, Wh, Wl)
+    return dict_outer_pair_fwd(Sh, Sl, Wh, Wl, block_k=block_k,
+                               interpret=interpret)

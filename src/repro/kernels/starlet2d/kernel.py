@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import auto_interpret
+
 _TAPS = ((0, 1.0 / 16), (1, 4.0 / 16), (2, 6.0 / 16), (3, 4.0 / 16),
          (4, 1.0 / 16))
 
@@ -38,12 +40,6 @@ def _starlet_kernel(x_ref, o_ref, *, step, height, width):
     y = pass_axis(x, 2, width)
     y = pass_axis(y, 1, height)
     o_ref[...] = y.astype(o_ref.dtype)
-
-
-def auto_interpret() -> bool:
-    """Compile the Mosaic kernel on TPU; fall back to interpreter mode
-    everywhere else (CPU/GPU hosts run the same traced jnp ops)."""
-    return jax.default_backend() != "tpu"
 
 
 def smooth_fwd(imgs, scale: int, *, block_n: int = 128,

@@ -87,6 +87,22 @@ def test_scdl_distributed_equals_sequential():
     np.testing.assert_allclose(log_s.costs, log_d.costs, rtol=5e-3)
     np.testing.assert_allclose(Xh_s, Xh_d, rtol=1e-2, atol=1e-3)
     print("scdl distributed ok")
+
+    # ill-conditioned regime: near-duplicate atoms, the factor-once
+    # Cholesky/Woodbury broadcast must still give distributed ==
+    # sequential (the psum'd outer products feed identical factors)
+    rng = np.random.RandomState(9)
+    proto_h, proto_l = rng.randn(25, 4), rng.randn(9, 4)
+    idx = rng.randint(0, 4, size=256); amp = rng.rand(256) + 0.5
+    S_h = jnp.asarray(proto_h[:, idx] * amp
+                      + 1e-3 * rng.randn(25, 256), jnp.float32)
+    S_l = jnp.asarray(proto_l[:, idx] * amp
+                      + 1e-3 * rng.randn(9, 256), jnp.float32)
+    Xh_s, _, log_s = train(S_h, S_l, cfg, mesh=None)
+    Xh_d, _, log_d = train(S_h, S_l, cfg, mesh=mesh)
+    np.testing.assert_allclose(log_s.costs, log_d.costs,
+                               rtol=5e-3, atol=1e-3)
+    print("scdl ill-conditioned distributed ok")
     """)
 
 

@@ -93,8 +93,47 @@ def test_scdl_fused_matches_per_step(chunk):
     Xhk, Xlk, log_k = train(S_h, S_l, cfg, chunk=chunk)
     assert len(log_k.costs) == N_ITER
     np.testing.assert_allclose(log_k.costs, log_1.costs, rtol=1e-5)
-    np.testing.assert_allclose(Xhk, Xh1, rtol=1e-4, atol=1e-6)
-    np.testing.assert_allclose(Xlk, Xl1, rtol=1e-4, atol=1e-6)
+    # chunk=1 folds the broadcast factors on the host (eager) vs in the
+    # scan carry (jitted) — identical algebra, ulp-level fp differences
+    np.testing.assert_allclose(Xhk, Xh1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(Xlk, Xl1, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_scdl_cost_every_matches_on_grid(chunk):
+    """SCDL's cost_every (the light step feeds the dictionary broadcast
+    every iteration — ``light_updates_replicated``): identical iterates,
+    objective only on the grid, on both the fused and per-step paths."""
+    S_h, S_l = coupled_patches(256, 25, 9, 16, seed=5)
+    cfg = SCDLConfig(n_atoms=16, max_iter=N_ITER)
+    Xh1, _, log_1 = train(S_h, S_l, cfg, chunk=chunk, cost_every=1)
+    Xh3, _, log_3 = train(S_h, S_l, cfg, chunk=chunk, cost_every=3)
+    np.testing.assert_allclose(Xh3, Xh1, rtol=1e-5, atol=1e-7)
+    c1, c3 = np.asarray(log_1.costs), np.asarray(log_3.costs)
+    np.testing.assert_allclose(c3[::3], c1[::3], rtol=1e-5)
+    # off-grid entries carry the last evaluated objective forward,
+    # including across the chunk boundary at i=4 (4 % 3 != 0)
+    assert c3[1] == c3[0] and c3[2] == c3[0]
+    assert c3[4] == c3[3] and c3[5] == c3[3]
+
+
+def test_scdl_per_chunk_cost_matches(chunk=5):
+    """cost_every="chunk" (engine.make_chunk_cost_step): no cond in the
+    scan body, one objective evaluation per dispatch on the chunk-final
+    state — entries match the full run at chunk-final iterations, the
+    rest carry the previous evaluation (+inf before the first)."""
+    S_h, S_l = coupled_patches(256, 25, 9, 16, seed=5)
+    cfg = SCDLConfig(n_atoms=16, max_iter=N_ITER)
+    Xh1, _, log_1 = train(S_h, S_l, cfg, chunk=chunk)
+    Xhc, _, log_c = train(S_h, S_l, cfg, chunk=chunk,
+                          cost_every="chunk")
+    np.testing.assert_allclose(Xhc, Xh1, rtol=1e-5, atol=1e-7)
+    c1, cc = np.asarray(log_1.costs), np.asarray(log_c.costs)
+    assert len(cc) == N_ITER
+    # chunk-final entries: 4, 9, and the tail chunk's 11 (12 = 5+5+2)
+    for i in (4, 9, 11):
+        np.testing.assert_allclose(cc[i], c1[i], rtol=1e-5)
+    assert np.isinf(cc[0]) and cc[5] == cc[4]
 
 
 def test_make_scan_step_cost_buffer_and_carry():

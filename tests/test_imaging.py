@@ -116,6 +116,119 @@ def test_randomized_svt_matches_exact():
 
 
 # -------------------------------------------------- Algorithm 2 (SCDL)
+def _seed_scdl_reference(S_h, S_l, cfg, iters):
+    """The pre-overhaul SCDL math, verbatim: per-iteration Gram rebuild +
+    LU solves, separate outer einsums, unfused dual updates.  The parity
+    oracle for the factor-once Cholesky/Woodbury rebuild."""
+    from repro.imaging.scdl import init_dicts
+    Xh, Xl = init_dicts(S_h, S_l, cfg)
+    c1, c2, c3 = cfg.c1, cfg.c2, cfg.c3
+    A = cfg.n_atoms
+    K = S_h.shape[1]
+    eye = jnp.eye(A)
+    Sh, Sl = S_h.T, S_l.T
+    Wh = Wl = P = Q = Y1 = Y2 = Y3 = jnp.zeros((K, A))
+    soft = lambda x, t: jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+    costs = []
+    for _ in range(iters):
+        Gh = 2.0 * Xh.T @ Xh + (c1 + c3) * eye
+        Gl = 2.0 * Xl.T @ Xl + (c2 + c3) * eye
+        rhs_h = 2.0 * Sh @ Xh + c1 * P + Y1 - Y3 + c3 * Wl
+        Wh = jnp.linalg.solve(Gh, rhs_h.T).T
+        rhs_l = 2.0 * Sl @ Xl + c2 * Q + Y2 + Y3 + c3 * Wh
+        Wl = jnp.linalg.solve(Gl, rhs_l.T).T
+        P = soft(Wh - Y1 / c1, cfg.lam_h / c1)
+        Q = soft(Wl - Y2 / c2, cfg.lam_l / c2)
+        Y1 = Y1 + c1 * (P - Wh)
+        Y2 = Y2 + c2 * (Q - Wl)
+        Y3 = Y3 + c3 * (Wh - Wl)
+        phi_h, phi_l = Wh.T @ Wh, Wl.T @ Wl
+        Xh = jnp.linalg.solve(phi_h + cfg.delta * eye, (Sh.T @ Wh).T).T
+        Xl = jnp.linalg.solve(phi_l + cfg.delta * eye, (Sl.T @ Wl).T).T
+        clip = lambda X: X / jnp.maximum(
+            jnp.linalg.norm(X, axis=0, keepdims=True), 1.0)
+        Xh, Xl = clip(Xh), clip(Xl)
+        nrmse_h = jnp.sqrt(jnp.sum((Sh - Wh @ Xh.T) ** 2)
+                           / (jnp.sum(Sh ** 2) + 1e-12))
+        nrmse_l = jnp.sqrt(jnp.sum((Sl - Wl @ Xl.T) ** 2)
+                           / (jnp.sum(Sl ** 2) + 1e-12))
+        costs.append(float(0.5 * (nrmse_h + nrmse_l)))
+    return np.asarray(Xh), np.asarray(Xl), np.asarray(costs)
+
+
+def _clustered_patches(K, p_dim, m_dim, n_proto=4, seed=9):
+    """Samples drawn from a few prototypes + tiny jitter: the random-
+    column dictionary init then holds many near-duplicate atoms, so
+    X^T X is nearly rank-``n_proto`` — the ill-conditioned regime the
+    ridge Grams must survive."""
+    rng = np.random.RandomState(seed)
+    proto_h = rng.randn(p_dim, n_proto)
+    proto_l = rng.randn(m_dim, n_proto)
+    idx = rng.randint(0, n_proto, size=K)
+    amp = rng.rand(K) + 0.5
+    S_h = proto_h[:, idx] * amp + 1e-3 * rng.randn(p_dim, K)
+    S_l = proto_l[:, idx] * amp + 1e-3 * rng.randn(m_dim, K)
+    return (jnp.asarray(S_h, jnp.float32), jnp.asarray(S_l, jnp.float32))
+
+
+def test_scdl_matches_seed_lu_math():
+    """Factor-once Cholesky/Woodbury solves == the seed's per-iteration
+    LU math within rtol 1e-4 (trajectory AND dictionaries, including the
+    delta-damped dictionary update) on well-posed data."""
+    S_h, S_l = coupled_patches(256, 25, 9, 16, seed=5)
+    cfg = SCDLConfig(n_atoms=16, max_iter=10)
+    Xh_ref, Xl_ref, costs_ref = _seed_scdl_reference(S_h, S_l, cfg, 10)
+    Xh, Xl, log = train(S_h, S_l, cfg, chunk=4)
+    np.testing.assert_allclose(np.asarray(log.costs), costs_ref,
+                               rtol=1e-4)
+    np.testing.assert_allclose(Xh, Xh_ref, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(Xl, Xl_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_scdl_cholesky_path_matches_seed_lu_on_ill_conditioned():
+    """Near-duplicate atoms: X^T X is nearly singular, only the ridge
+    keeps the W systems solvable.  The trajectories must agree tightly
+    until the NRMSE reaches the data's 1e-3 jitter floor, where the
+    problem is degenerate (near-duplicate atoms make the dictionary
+    non-unique) and fp32 roundoff dominates BOTH implementations — there
+    we require agreement at the floor scale, and that both actually
+    solved the problem."""
+    S_h, S_l = _clustered_patches(256, 25, 9)
+    cfg = SCDLConfig(n_atoms=16, max_iter=10)
+    _, _, costs_ref = _seed_scdl_reference(S_h, S_l, cfg, 10)
+    Xh, Xl, log = train(S_h, S_l, cfg, chunk=4)
+    costs = np.asarray(log.costs)
+    np.testing.assert_allclose(costs, costs_ref, rtol=2e-3, atol=2e-3)
+    # the well-posed head of the trajectory matches tightly
+    np.testing.assert_allclose(costs[:4], costs_ref[:4], rtol=1e-3)
+    assert costs[-1] < 0.01 and costs_ref[-1] < 0.01
+    norms = np.linalg.norm(Xh, axis=0)
+    assert (norms <= 1.0 + 1e-4).all()
+
+
+def test_scdl_solve_factor_branches_match_lu():
+    """All three factor-once regimes (thin Woodbury apply, dense inverse
+    via Woodbury build, dense direct) equal a dense LU solve, on an
+    ill-conditioned dictionary (near-duplicate atoms + ridge)."""
+    from repro.imaging.scdl import _ridge_solve, _solve_factor
+    key = jax.random.PRNGKey(3)
+    for P, A in [(81, 512), (289, 512), (25, 16)]:
+        base = jax.random.normal(key, (P, max(A // 8, 2)))
+        X = jnp.repeat(base, 8, axis=1)[:, :A]
+        X = X + 1e-3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                         (P, A))
+        X = X / jnp.maximum(jnp.linalg.norm(X, axis=0, keepdims=True),
+                            1e-8)
+        S = jax.random.normal(jax.random.fold_in(key, 2), (128, P))
+        Z = jax.random.normal(jax.random.fold_in(key, 3), (128, A))
+        c = 1.2
+        W = _ridge_solve(S, Z, X, _solve_factor(X, c), c)
+        G = 2.0 * X.T @ X + c * jnp.eye(A)
+        W_ref = jnp.linalg.solve(G, (2.0 * S @ X + Z).T).T
+        np.testing.assert_allclose(np.asarray(W), np.asarray(W_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
 def test_scdl_converges_and_reconstructs():
     S_h, S_l = coupled_patches(512, 25, 9, 32, seed=4)
     cfg = SCDLConfig(n_atoms=32, max_iter=15)

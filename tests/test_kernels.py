@@ -166,10 +166,17 @@ def test_starlet_batched_forward_adjoint_match_reference():
 
 
 # ----------------------------------------------------------- dict outer
-from repro.kernels.dict_outer.ops import dict_outer
-from repro.kernels.dict_outer.ref import dict_outer_ref
+from repro.kernels.dict_outer.ops import dict_outer, dict_outer_pair
+from repro.kernels.dict_outer.ref import dict_outer_pair_ref, dict_outer_ref
 
-DO_CASES = [(2048, 25, 64), (1024, 289, 128), (512, 9, 256)]
+# (1000, ...) and block_k=512 exercise the non-block-aligned zero-pad
+DO_CASES = [(2048, 25, 64), (1024, 289, 128), (512, 9, 256),
+            (1000, 25, 64)]
+
+
+def _do_tol(dtype, K):
+    return dict(rtol=2e-2, atol=K * 2e-3) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=K * 1e-6)
 
 
 @pytest.mark.parametrize("case", DO_CASES)
@@ -178,9 +185,77 @@ def test_dict_outer(case, dtype):
     K, P, A = case
     S = jax.random.normal(jax.random.fold_in(KEY, 13), (K, P), dtype)
     W = jax.random.normal(jax.random.fold_in(KEY, 14), (K, A), dtype)
-    sw, ww = dict_outer(S, W)
+    sw, ww = dict_outer(S, W, use_kernel=True)
     swr, wwr = dict_outer_ref(S, W)
-    tol = dict(rtol=2e-2, atol=K * 2e-3) if dtype == jnp.bfloat16 else \
-        dict(rtol=1e-4, atol=K * 1e-6)
+    tol = _do_tol(dtype, K)
     np.testing.assert_allclose(np.asarray(sw), np.asarray(swr), **tol)
     np.testing.assert_allclose(np.asarray(ww), np.asarray(wwr), **tol)
+
+
+DOP_CASES = [(2048, 289, 81, 128), (1000, 289, 81, 128),
+             (512, 25, 9, 256), (130, 25, 9, 128)]
+
+
+@pytest.mark.parametrize("case", DOP_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dict_outer_pair(case, dtype):
+    """The coupled-pair fusion: one grid pass over K produces all four
+    outer products, including non-block-aligned sample counts."""
+    K, P, M, A = case
+    Sh = jax.random.normal(jax.random.fold_in(KEY, 15), (K, P), dtype)
+    Sl = jax.random.normal(jax.random.fold_in(KEY, 16), (K, M), dtype)
+    Wh = jax.random.normal(jax.random.fold_in(KEY, 17), (K, A), dtype)
+    Wl = jax.random.normal(jax.random.fold_in(KEY, 18), (K, A), dtype)
+    out = dict_outer_pair(Sh, Sl, Wh, Wl, use_kernel=True)
+    ref = dict_outer_pair_ref(Sh, Sl, Wh, Wl)
+    tol = _do_tol(dtype, K)
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), **tol)
+
+
+# ---------------------------------------------------------- admm elwise
+from repro.kernels.admm_elwise.ops import admm_elwise
+from repro.kernels.admm_elwise.ref import admm_elwise_ref
+
+AE_KW = dict(c1=0.4, c2=0.4, c3=0.8, t1=0.025, t2=0.025)
+AE_CASES = [(2048, 128), (1000, 256), (130, 128), (512, 512)]
+
+
+@pytest.mark.parametrize("case", AE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_admm_elwise(case, dtype):
+    """Fused soft-threshold + dual updates over the stacked (K, 5, A)
+    multiplier state, kernel vs oracle, non-block-aligned K included."""
+    K, A = case
+    Wh = jax.random.normal(jax.random.fold_in(KEY, 19), (K, A), dtype)
+    Wl = jax.random.normal(jax.random.fold_in(KEY, 20), (K, A), dtype)
+    YZ = jax.random.normal(jax.random.fold_in(KEY, 21), (K, 5, A), dtype)
+    out = admm_elwise(Wh, Wl, YZ, use_kernel=True, **AE_KW)
+    ref = admm_elwise_ref(Wh, Wl, YZ, **AE_KW)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_admm_elwise_matches_unfused_formulation():
+    """The kernel's clip/fold algebra equals the textbook step 8:
+    soft-threshold P/Q then three dual ascent updates and the Z
+    right-hand-side combinations."""
+    K, A = 257, 64
+    c1, c2, c3, t1, t2 = (AE_KW[k] for k in ("c1", "c2", "c3", "t1",
+                                             "t2"))
+    Wh = jax.random.normal(jax.random.fold_in(KEY, 22), (K, A))
+    Wl = jax.random.normal(jax.random.fold_in(KEY, 23), (K, A))
+    YZ = jax.random.normal(jax.random.fold_in(KEY, 24), (K, 5, A))
+    y1, y2, y3 = YZ[:, 0], YZ[:, 1], YZ[:, 2]
+    soft = lambda x, t: jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+    P = soft(Wh - y1 / c1, t1)
+    Q = soft(Wl - y2 / c2, t2)
+    Y1 = y1 + c1 * (P - Wh)
+    Y2 = y2 + c2 * (Q - Wl)
+    Y3 = y3 + c3 * (Wh - Wl)
+    Z1 = c1 * P + Y1 - Y3 + c3 * Wl
+    Z2 = c2 * Q + Y2 + Y3
+    expect = jnp.stack([Y1, Y2, Y3, Z1, Z2], axis=1)
+    got = admm_elwise_ref(Wh, Wl, YZ, **AE_KW)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
