@@ -33,7 +33,7 @@ import numpy as np
 
 from benchmarks.common import emit, write_bench_json
 from repro.core.bundle import Bundle
-from repro.core.driver import IterativeDriver
+from repro.core.driver import IterativeDriver, RunOptions
 from repro.imaging import psf as psf_op
 from repro.imaging import starlet
 from repro.imaging.condat import SolverConfig, solve
@@ -81,11 +81,13 @@ def _drive(data, cfg, iters: int, chunk: int,
         bundle = Bundle(data=stripped, replicated=bundle.replicated,
                         mesh=bundle.mesh, axes=bundle.axes)
         driver = IterativeDriver(make_seed_step_fn(cfg), bundle,
-                                 max_iter=iters, tol=0, chunk=chunk)
+                                 options=RunOptions(max_iter=iters, tol=0,
+                                                    chunk=chunk))
     else:
         driver = IterativeDriver(
-            make_step_fn(cfg), bundle, max_iter=iters, tol=0,
-            chunk=chunk, step_fn_light=make_light_step_fn(cfg))
+            make_step_fn(cfg), bundle,
+            options=RunOptions(max_iter=iters, tol=0, chunk=chunk,
+                               step_fn_light=make_light_step_fn(cfg)))
     driver.run()
     return driver
 

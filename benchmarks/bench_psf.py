@@ -95,16 +95,18 @@ def fig5_scaling(n=512):
 def fig7_convergence(n=256, iters=30):
     data = psf_op.simulate(n, jax.random.PRNGKey(2))
     cfg = SolverConfig(mode="sparse", n_scales=3)
+    from repro.core.problem import solve as solve_problem
     from repro.imaging.condat import solve
-    from repro.imaging.deconvolve import deconvolve
+    from repro.imaging.deconvolve import DeconvolutionProblem
     import time as _t
     t0 = _t.perf_counter()
     _, costs_seq = solve(data.Y, data.psfs, cfg, sigma_noise=data.sigma,
                          n_iter=iters)
     t_seq = _t.perf_counter() - t0
     t0 = _t.perf_counter()
-    _, log = deconvolve(data.Y, data.psfs, cfg, mesh=None,
-                        sigma_noise=data.sigma, max_iter=iters, tol=0)
+    log = solve_problem(DeconvolutionProblem(cfg, sigma_noise=data.sigma),
+                        data.Y, data.psfs, mesh=None, max_iter=iters,
+                        tol=0).log
     t_dist = _t.perf_counter() - t0
     match = np.allclose(np.asarray(costs_seq), np.asarray(log.costs),
                         rtol=1e-3)

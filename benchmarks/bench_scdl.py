@@ -32,13 +32,14 @@ import numpy as np
 
 from benchmarks.common import emit, time_call, write_bench_json
 from repro.core.bundle import Bundle
-from repro.core.driver import IterativeDriver
+from repro.core.driver import IterativeDriver, RunOptions
 from repro.core.engine import make_step
 from repro.core import persistence as P
 from repro.data.synthetic import coupled_patches
-from repro.imaging.scdl import (SCDLConfig, build_bundle, make_cost_fn,
-                                make_light_step_fn, make_refresh_fn,
-                                make_step_fn, train)
+from repro.core.problem import solve
+from repro.imaging.scdl import (SCDLConfig, SCDLProblem, build_bundle,
+                                make_cost_fn, make_light_step_fn,
+                                make_refresh_fn, make_step_fn)
 
 X_CORES = 24
 SHAPES = {"HS": (25, 9), "GS": (289, 81)}
@@ -121,9 +122,10 @@ def seed_driver(S_h, S_l, cfg: SCDLConfig, iters: int,
     """Drive the seed math through the current chunked driver."""
     driver = IterativeDriver(
         make_seed_step_fn(cfg), seed_bundle(S_h, S_l, cfg),
-        max_iter=iters, tol=0, chunk=chunk,
-        update_replicated=lambda r, out: {"Xh": out["Xh"],
-                                          "Xl": out["Xl"]})
+        options=RunOptions(
+            max_iter=iters, tol=0, chunk=chunk,
+            update_replicated=lambda r, out: {"Xh": out["Xh"],
+                                              "Xl": out["Xl"]}))
     driver.run()
     return driver
 
@@ -156,20 +158,23 @@ def step_overhaul(K=4096, A=512, iters=32, chunk=8, cost_every=4,
     # ---- parity: trajectories vs the seed math (rtol 1e-4)
     drv_seed = seed_driver(S_h, S_l, cfg, iters, chunk=chunk)
     costs_seed = np.asarray(drv_seed.log.costs)
-    _, _, log_new = train(S_h, S_l, cfg, chunk=chunk, cost_every=1)
+    log_new = solve(SCDLProblem(cfg), S_h, S_l, chunk=chunk,
+                    cost_every=1).log
     np.testing.assert_allclose(np.asarray(log_new.costs), costs_seed,
                                rtol=1e-4)
-    _, _, log_ce = train(S_h, S_l, cfg, chunk=chunk,
-                         cost_every=cost_every)
+    log_ce = solve(SCDLProblem(cfg), S_h, S_l, chunk=chunk,
+                   cost_every=cost_every).log
     np.testing.assert_allclose(
         np.asarray(log_ce.costs)[::cost_every],
         costs_seed[::cost_every], rtol=1e-4)
-    _, _, log_cc = train(S_h, S_l, cfg, chunk=chunk, cost_every="chunk")
+    log_cc = solve(SCDLProblem(cfg), S_h, S_l, chunk=chunk,
+                   cost_every="chunk").log
     np.testing.assert_allclose(
         np.asarray(log_cc.costs)[chunk - 1::chunk],
         costs_seed[chunk - 1::chunk], rtol=1e-4)
     big = min(4 * chunk, iters)
-    _, _, log_c32 = train(S_h, S_l, cfg, chunk=big, cost_every="chunk")
+    log_c32 = solve(SCDLProblem(cfg), S_h, S_l, chunk=big,
+                    cost_every="chunk").log
     np.testing.assert_allclose(
         np.asarray(log_c32.costs)[big - 1::big],
         costs_seed[big - 1::big], rtol=1e-4)
@@ -318,7 +323,7 @@ def fig14_convergence(K=2048, A=64, iters=20):
     S_h, S_l = coupled_patches(K, 289, 81, A, seed=4)
     cfg = SCDLConfig(n_atoms=A, max_iter=iters)
     t0 = _t.perf_counter()
-    Xh, Xl, log = train(S_h, S_l, cfg)
+    log = solve(SCDLProblem(cfg), S_h, S_l).log
     t = _t.perf_counter() - t0
     emit("fig14/scdl_convergence", t / iters * 1e6,
          f"nrmse_first={log.costs[0]:.4f};nrmse_final={log.costs[-1]:.4f}")

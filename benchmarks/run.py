@@ -1,6 +1,6 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,lm,driver]
+    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,lm,driver,api]
                                             [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
@@ -17,7 +17,7 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="psf,scdl,memory,lm,driver")
+    ap.add_argument("--only", default="psf,scdl,memory,lm,driver,api")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     wanted = set(args.only.split(","))
@@ -40,6 +40,9 @@ def main() -> None:
         from benchmarks import bench_driver
         _run(lambda: bench_driver.run(smoke=args.smoke), "driver",
              failures)
+    if "api" in wanted:
+        from benchmarks import bench_api
+        _run(lambda: bench_api.run(smoke=args.smoke), "api", failures)
     if failures:
         print(f"# FAILED tables: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,8 +1,9 @@
 """Use case (a): space-variant deconvolution of galaxy survey images.
 
 Simulates a Euclid-like stack (stamps + spatially varying anisotropic
-PSFs + noise), runs the distributed Algorithm 1 with both regularisers,
-and reports recovery quality + convergence — the paper's Figs. 4/7 in
+PSFs + noise), runs the distributed Algorithm 1 with both regularisers
+through the declarative ``solve()`` entry point (DESIGN.md §14), and
+reports recovery quality + convergence — the paper's Figs. 4/7 in
 miniature.
 
     PYTHONPATH=src python examples/psf_deconvolution.py [--n 512]
@@ -13,9 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.problem import solve
 from repro.imaging import psf as psf_op
 from repro.imaging.condat import SolverConfig
-from repro.imaging.deconvolve import deconvolve
+from repro.imaging.deconvolve import DeconvolutionProblem
 from repro.launch.mesh import smallest_mesh
 
 
@@ -33,14 +35,15 @@ def main():
     mesh = smallest_mesh()
     for mode in ("sparse", "lowrank"):
         cfg = SolverConfig(mode=mode, n_scales=4, lam=0.05, rank=16)
-        X, log = deconvolve(data.Y, data.psfs, cfg, mesh=mesh,
-                            sigma_noise=data.sigma,
-                            max_iter=args.iters, tol=1e-5)
+        sol = solve(DeconvolutionProblem(cfg, sigma_noise=data.sigma),
+                    data.Y, data.psfs, mesh=mesh,
+                    max_iter=args.iters, tol=1e-5)
+        log = sol.log
         print(f"[{mode:7s}] cost {log.costs[0]:.3f} -> {log.costs[-1]:.3f} "
               f"in {len(log.costs)} iters "
               f"({log.total_seconds:.1f}s, "
               f"converged_at={log.converged_at}); "
-              f"deconvolved MSE: {mse(jnp.asarray(X), data.X_true):.3e}")
+              f"deconvolved MSE: {mse(jnp.asarray(sol.x), data.X_true):.3e}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Use case (b): super-resolution via sparse coupled dictionary training.
 
-Trains coupled HR/LR dictionaries with the distributed Algorithm 2, then
+Trains coupled HR/LR dictionaries with the distributed Algorithm 2
+through the declarative ``solve()`` entry point (DESIGN.md §14), then
 super-resolves held-out LR patches: sparse-code them against X_l and
 reconstruct with X_h — the paper's remote-sensing pipeline end to end.
 
@@ -12,8 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.problem import solve
 from repro.data.synthetic import coupled_patches
-from repro.imaging.scdl import SCDLConfig, train
+from repro.imaging.scdl import SCDLConfig
 from repro.launch.mesh import smallest_mesh
 
 
@@ -42,17 +44,22 @@ def main():
                     help="evaluate the NRMSE objective every k-th "
                          "iteration only (the iterates are unaffected; "
                          "the off-grid log carries the last value)")
+    ap.add_argument("--patches", type=int, default=8192,
+                    help="training patch count (CI smoke uses a small "
+                         "value)")
     args = ap.parse_args()
 
     p_dim, m_dim = (289, 81) if args.gs else (25, 9)
-    K = 8192
+    K = args.patches
     S_h, S_l = coupled_patches(K + 512, p_dim, m_dim, args.atoms, seed=1)
     train_h, test_h = S_h[:, :K], S_h[:, K:]
     train_l, test_l = S_l[:, :K], S_l[:, K:]
 
     cfg = SCDLConfig(n_atoms=args.atoms, max_iter=args.iters)
-    Xh, Xl, log = train(train_h, train_l, cfg, mesh=smallest_mesh(),
-                        cost_every=args.cost_every)
+    sol = solve("scdl", train_h, train_l, cfg=cfg, mesh=smallest_mesh(),
+                cost_every=args.cost_every)
+    Xh, Xl = sol.x
+    log = sol.log
     print(f"trained {'GS' if args.gs else 'HS'} dictionaries "
           f"(A={args.atoms}): NRMSE {log.costs[0]:.3f} -> "
           f"{log.costs[-1]:.3f} over {len(log.costs)} iters "

@@ -20,8 +20,9 @@ Execution modes (DESIGN.md §12):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+import warnings
+from dataclasses import dataclass, field, fields, replace
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,57 @@ from repro.core.bundle import Bundle
 from repro.core.engine import (init_cost_like, init_out_like,
                                make_chunk_cost_step, make_scan_step,
                                make_step)
+
+
+@dataclass(frozen=True)
+class RunOptions:
+    """Everything the driver needs beyond ``(step_fn, bundle)``.
+
+    One dataclass replaces the former kwarg sprawl of
+    ``IterativeDriver.__init__`` (DESIGN.md §14).  Two kinds of fields:
+
+    - *run control* — iteration budget, convergence, chunking,
+      observability and checkpoint cadence.  These are what callers of
+      :func:`repro.core.problem.solve` override per run.
+    - *step wiring* — the cost-free/objective-only step variants and the
+      broadcast-update hook.  Hand-wired drivers set these directly;
+      ``solve()`` derives them from a :class:`~repro.core.problem.Problem`
+      declaration.
+
+    ``cost_every`` accepts an int (evaluate the objective every k-th
+    iteration; requires ``step_fn_light``) or the string ``"chunk"``
+    (one evaluation per dispatched chunk on its final state; requires
+    ``step_fn_cost`` — the fastest observability mode, DESIGN.md §13).
+    """
+    # run control
+    max_iter: int = 300
+    tol: float = 1e-4
+    chunk: int = 8
+    cost_every: Union[int, str] = 1
+    cost_window: int = 3
+    straggler_factor: float = 3.0
+    checkpoint_every: int = 0
+    checkpoint_fn: Optional[Callable] = None
+    # step wiring
+    step_fn_light: Optional[Callable] = None
+    step_fn_cost: Optional[Callable] = None
+    update_replicated: Optional[Callable] = None
+    light_updates_replicated: bool = False
+
+    def __post_init__(self):
+        if isinstance(self.cost_every, str) and self.cost_every != "chunk":
+            raise ValueError(
+                f'cost_every must be a positive int or the string '
+                f'"chunk", got {self.cost_every!r}')
+
+    def merged_with(self, **overrides) -> "RunOptions":
+        """A copy with the non-None entries of ``overrides`` applied
+        (unknown keys raise, matching dataclasses.replace)."""
+        return replace(self, **{k: v for k, v in overrides.items()
+                                if v is not None})
+
+
+_RUN_OPTION_NAMES = tuple(f.name for f in fields(RunOptions))
 
 
 @dataclass
@@ -53,35 +105,62 @@ class IterativeDriver:
     change drops below ``tol`` (the paper's epsilon) or ``max_iter`` is
     hit.  ``out`` is either a scalar cost or a dict with a ``"cost"``
     entry plus optional replicated state consumed by
-    ``update_replicated``.
+    ``options.update_replicated``.
+
+    All remaining configuration lives in one :class:`RunOptions`.  The
+    former individual kwargs (``max_iter=``, ``step_fn_light=``, ...) are
+    still accepted but deprecated: they are mapped onto ``options`` with
+    a ``DeprecationWarning``.
     """
 
     def __init__(self, step_fn: Callable, bundle: Bundle, *,
-                 max_iter: int = 300, tol: float = 1e-4,
-                 cost_window: int = 3,
-                 straggler_factor: float = 3.0,
-                 checkpoint_every: int = 0,
-                 checkpoint_fn: Optional[Callable] = None,
-                 chunk: int = 8,
-                 cost_every: int = 1,
-                 update_replicated: Optional[Callable] = None,
-                 step_fn_light: Optional[Callable] = None,
-                 light_updates_replicated: bool = False,
-                 step_fn_cost: Optional[Callable] = None):
+                 options: Optional[RunOptions] = None, **legacy):
+        if legacy:
+            unknown = set(legacy) - set(_RUN_OPTION_NAMES)
+            if unknown:
+                raise TypeError(
+                    f"IterativeDriver got unexpected kwargs {sorted(unknown)}; "
+                    f"valid RunOptions fields: {list(_RUN_OPTION_NAMES)}")
+            warnings.warn(
+                "passing IterativeDriver configuration as individual "
+                f"kwargs ({sorted(legacy)}) is deprecated; pass "
+                "options=RunOptions(...) instead (DESIGN.md §14)",
+                DeprecationWarning, stacklevel=2)
+            options = replace(options or RunOptions(), **legacy)
+        self.options = options = options or RunOptions()
         self.bundle = bundle
         self.step_fn = step_fn
-        self.step_fn_light = step_fn_light
-        self.step_fn_cost = step_fn_cost
-        self.update_replicated = update_replicated
-        self.light_updates_replicated = light_updates_replicated
-        self.max_iter = max_iter
-        self.tol = tol
-        self.cost_window = cost_window
-        self.straggler_factor = straggler_factor
-        self.checkpoint_every = checkpoint_every
-        self.checkpoint_fn = checkpoint_fn
-        self.chunk = max(int(chunk), 1)
-        self.cost_every = max(int(cost_every), 1)
+        self.step_fn_light = options.step_fn_light
+        self.step_fn_cost = options.step_fn_cost
+        self.update_replicated = options.update_replicated
+        self.light_updates_replicated = options.light_updates_replicated
+        self.max_iter = options.max_iter
+        self.tol = options.tol
+        self.cost_window = options.cost_window
+        self.straggler_factor = options.straggler_factor
+        self.checkpoint_every = options.checkpoint_every
+        self.checkpoint_fn = options.checkpoint_fn
+        self.chunk = max(int(options.chunk), 1)
+        self._per_chunk = options.cost_every == "chunk"
+        if self._per_chunk:
+            # both halves of the per-chunk contract, or the driver would
+            # silently fall back to evaluating the objective every
+            # iteration (see _cost_per_chunk)
+            if options.step_fn_cost is None or options.step_fn_light is None:
+                raise ValueError(
+                    'cost_every="chunk" requires step_fn_cost (a '
+                    "standalone objective over the post-iteration "
+                    "state) AND step_fn_light (the cost-free step the "
+                    "scan body runs)")
+            self.cost_every = 1
+        else:
+            if options.step_fn_cost is not None:
+                raise ValueError(
+                    "step_fn_cost is only consumed by the per-chunk "
+                    'objective mode — pass cost_every="chunk" with it, '
+                    f"not cost_every={options.cost_every!r} (which "
+                    f"would silently ignore it)")
+            self.cost_every = max(int(options.cost_every), 1)
         self.log = RunLog()
         self._compiled: Dict[int, Callable] = {}
 
@@ -160,13 +239,12 @@ class IterativeDriver:
     def _cost_per_chunk(self) -> bool:
         """Chunk-granular objective (``engine.make_chunk_cost_step``):
         the scan runs only the cost-free step and the objective is
-        evaluated once per dispatch, on the chunk's final state.
-        Requires the light step to feed the broadcast update and a
-        standalone objective function; per-step runs (chunk=1) evaluate
-        every iteration anyway, so they use the plain path."""
-        return (self.step_fn_cost is not None
-                and self.step_fn_light is not None
-                and self.chunk > 1)
+        evaluated once per dispatch, on the chunk's final state.  Keyed
+        on the *requested* ``cost_every="chunk"`` (an integer cadence
+        with a step_fn_cost present must honor the integer, not switch
+        modes); per-step runs (chunk=1) evaluate every iteration
+        anyway, so they use the plain path."""
+        return self._per_chunk and self.chunk > 1
 
     def _run_chunked(self, start_iter: int) -> Bundle:
         data, rep = self.bundle.data, self.bundle.replicated

@@ -234,7 +234,11 @@ def make_chunk_cost_step(fn_light: Callable, fn_cost: Callable,
 
     - ``fn_light(data, replicated, axes) -> (data', out_partial)`` with
       ``out_partial`` feeding ``update_replicated`` every iteration (the
-      ``light_updates_replicated`` contract).
+      ``light_updates_replicated`` contract).  When ``update_replicated``
+      is ``None`` the broadcast state is constant across the scan and
+      ``fn_light`` may return bare ``data'`` instead (the plain
+      cost-free-step contract, e.g. deconvolution) — the Problem-API
+      wiring rules in DESIGN.md §14 rely on this.
     - ``fn_cost(data, replicated, axes) -> out`` evaluates the objective
       scalars from the *post-iteration* state (the broadcast carry holds
       the iteration's reduced results).
@@ -249,8 +253,12 @@ def make_chunk_cost_step(fn_light: Callable, fn_cost: Callable,
 
     def body(carry, _):
         d, r = carry
-        d2, aux = fn_light(d, r, axes)
-        r2 = update_replicated(r, aux) if update_replicated else r
+        if update_replicated is None:
+            d2 = fn_light(d, r, axes)
+            r2 = r
+        else:
+            d2, aux = fn_light(d, r, axes)
+            r2 = update_replicated(r, aux)
         return (d2, r2), None
 
     def chunk_fn(data, rep, start, last):

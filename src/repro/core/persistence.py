@@ -43,10 +43,14 @@ def wrap_step(step_fn: Callable, policy: Policy) -> Callable:
     return step_fn
 
 
+def _to_host(tree: Any) -> Any:
+    """The eviction discipline: device tree -> host ndarray tree."""
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+
 def spill(bundle: Bundle) -> Any:
     """MEMORY_AND_DISK eviction: pull the bundle to host buffers."""
-    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                        bundle.data)
+    return _to_host(bundle.data)
 
 
 def restore(bundle: Bundle, host_data: Any) -> Bundle:
@@ -58,3 +62,31 @@ def restore(bundle: Bundle, host_data: Any) -> Bundle:
     shard = NamedSharding(bundle.mesh, bundle.record_spec())
     data = jax.tree.map(lambda x: jax.device_put(x, shard), host_data)
     return bundle.with_data(data)
+
+
+def spill_bundle(bundle: Bundle) -> Any:
+    """Full-state eviction: data AND replicated sides as host trees —
+    the checkpoint payload of ``repro.core.problem.solve`` (the broadcast
+    variables are part of the iterate for carry-riding learners like
+    SCDL, so a data-only spill could not resume them)."""
+    return {"data": spill(bundle),
+            "replicated": _to_host(bundle.replicated)}
+
+
+def bundle_shardings(bundle: Bundle) -> Any:
+    """NamedSharding trees matching :func:`spill_bundle`'s layout —
+    hand these to ``checkpoint.checkpointer.restore(shardings=...)`` so
+    restored leaves land sharded directly (one device_put, no
+    materialize-on-one-device step).  None when the bundle has no
+    mesh."""
+    if bundle.mesh is None:
+        return None
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    dshard = NamedSharding(bundle.mesh, bundle.record_spec())
+    rshard = NamedSharding(bundle.mesh, P())
+    return {"data": jax.tree.map(lambda _: dshard, bundle.data),
+            "replicated": jax.tree.map(lambda _: rshard,
+                                       bundle.replicated)}
+
+

@@ -1,0 +1,411 @@
+"""Declarative workload API: declare a `Problem` once, `solve()` it.
+
+The paper's architecture is one generic driver (configure ->
+parallelize -> iterate) serving *variant* imaging workloads.  After the
+engine grew chunked scans, broadcast carries and per-chunk objectives
+(DESIGN.md §12/§13), expressing a workload meant hand-assembling up to
+four step variants plus the driver kwargs wiring them together.  This
+module collapses that to a declaration:
+
+    class MyProblem(Problem):
+        def init_bundle(self, inputs, mesh): ...   # phases (a)+(b)
+        def full_step(self, d, rep, axes): ...     # phase (c), one iter
+        # optional: light_step / cost / refresh_replicated
+
+    sol = solve(MyProblem(cfg), *inputs, mesh=mesh, max_iter=100)
+
+``solve()`` derives the entire driver wiring — scan-step vs
+chunk-cost-step selection, broadcast-carry updates, light/cost variants,
+checkpoint hooks — from which optional methods the Problem defines plus
+its static metadata (``replicated_in_carry``, ``default_chunk``,
+``default_cost_every``).  The derivation rules are spelled out in
+DESIGN.md §14.
+
+Workloads register under a string key (``@register("scdl")``); the
+registry is importable as ``repro.problems`` and lazily imports the
+built-in workloads, so ``solve("scdl", S_h, S_l)`` works without any
+imaging import on the caller's side.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, replace
+from typing import (Any, Callable, ClassVar, Dict, Optional, Tuple, Type,
+                    Union)
+
+import dataclasses
+
+from repro.core import persistence
+from repro.core.bundle import Bundle, gather
+from repro.core.driver import IterativeDriver, RunLog, RunOptions
+
+# --------------------------------------------------------------------
+# The Problem declaration
+# --------------------------------------------------------------------
+
+
+class Problem:
+    """One workload, declared once.
+
+    Required hooks (phases of the paper's driver program):
+
+    - ``init_bundle(inputs, mesh) -> Bundle`` — configuration +
+      parallelization: build the co-partitioned bundle (and its
+      replicated/broadcast side) from the raw input arrays.
+    - ``full_step(d, rep, axes) -> (d', out)`` — one learning iteration
+      over a local block; ``out`` is a scalar cost or a dict with a
+      ``"cost"`` entry (plus any reduced state feeding
+      ``refresh_replicated``).  Must psum over ``axes`` itself.
+
+    Optional hooks (``None`` at class level means "not declared"; the
+    wiring derivation in :func:`solve` keys off their presence):
+
+    - ``light_step(d, rep, axes)`` — the same iteration without the
+      objective evaluation.  Returns bare ``d'`` normally, or
+      ``(d', out_partial)`` when ``replicated_in_carry`` is set.
+      Enables ``cost_every > 1`` skipping.
+    - ``cost(d, rep, axes) -> out`` — standalone objective over the
+      *post-iteration* state.  Together with ``light_step`` it enables
+      the fastest observability mode, ``cost_every="chunk"``
+      (``engine.make_chunk_cost_step``).
+    - ``refresh_replicated(rep, out) -> rep'`` — fold the reduced output
+      back into the broadcast state each iteration (the paper's step-7
+      driver broadcast, run inside the scan carry).
+
+    Static metadata:
+
+    - ``replicated_in_carry`` — the broadcast state is part of the
+      iterate and must advance on *every* iteration, evaluated or not
+      (SCDL's dictionaries).  Implies ``light_step`` returns
+      ``(d', out_partial)``.
+    - ``default_chunk`` / ``default_cost_every`` — per-workload defaults
+      for the fused-dispatch granularity and objective cadence.
+
+    ``finalize(bundle, log) -> (x, aux)`` turns the final bundle into
+    the workload's primary result (default: the gathered data tree).
+    """
+
+    name: ClassVar[Optional[str]] = None      # set by @register
+    replicated_in_carry: ClassVar[bool] = False
+    default_chunk: ClassVar[int] = 8
+    default_cost_every: ClassVar[Union[int, str]] = 1
+
+    # optional hooks — subclasses declare them as methods
+    light_step: Optional[Callable] = None
+    cost: Optional[Callable] = None
+    refresh_replicated: Optional[Callable] = None
+
+    # ------------------------------------------------------- required
+    def init_bundle(self, inputs: Tuple, mesh) -> Bundle:
+        raise NotImplementedError
+
+    def full_step(self, d, rep, axes):
+        raise NotImplementedError
+
+    # ------------------------------------------------------- optional
+    def default_options(self) -> RunOptions:
+        """Per-workload RunOptions defaults: ``max_iter``/``tol`` come
+        from the workload's config dataclass when it has them (the
+        ``self.cfg`` convention), chunking/cadence from the class
+        metadata."""
+        base = RunOptions()
+        cfg = getattr(self, "cfg", None)
+        return RunOptions(
+            max_iter=getattr(cfg, "max_iter", base.max_iter),
+            tol=getattr(cfg, "tol", base.tol),
+            chunk=self.default_chunk,
+            cost_every=self.default_cost_every)
+
+    def finalize(self, bundle: Bundle, log: RunLog) -> Tuple[Any, Dict]:
+        return gather(bundle), {}
+
+    # ------------------------------------------------------- plumbing
+    def _declared(self, hook: str) -> Optional[Callable]:
+        fn = getattr(self, hook, None)
+        return fn if callable(fn) else None
+
+
+@dataclass
+class Solution:
+    """What ``solve()`` returns: the workload's primary result ``x``,
+    secondary outputs ``aux``, the driver's convergence log, and the
+    final bundle (for chained solves / inspection)."""
+    x: Any
+    aux: Dict[str, Any]
+    log: RunLog
+    bundle: Bundle
+    problem: Problem
+
+    @property
+    def costs(self):
+        return self.log.costs
+
+
+# --------------------------------------------------------------------
+# Workload registry
+# --------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Problem]] = {}
+
+# built-in workloads, imported lazily on first lookup so that
+# ``solve("scdl", ...)`` works without the caller importing imaging code
+_BUILTIN_MODULES: Dict[str, str] = {
+    "deconvolve": "repro.imaging.deconvolve",
+    "lowrank": "repro.imaging.lowrank",
+    "scdl": "repro.imaging.scdl",
+}
+
+
+def register(name: str):
+    """Class decorator: ``@register("scdl")`` puts the Problem subclass
+    into the string-keyed workload registry and stamps ``cls.name``."""
+
+    def deco(cls: Type[Problem]) -> Type[Problem]:
+        if not (isinstance(cls, type) and issubclass(cls, Problem)):
+            raise TypeError(f"@register({name!r}) expects a Problem "
+                            f"subclass, got {cls!r}")
+        prev = _REGISTRY.get(name)
+        if prev is not None and prev is not cls:
+            raise ValueError(
+                f"workload {name!r} already registered to "
+                f"{prev.__module__}.{prev.__name__}")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get(name: str) -> Type[Problem]:
+    """Look up a registered Problem class by key (lazily importing the
+    built-in workload modules)."""
+    if name not in _REGISTRY and name in _BUILTIN_MODULES:
+        importlib.import_module(_BUILTIN_MODULES[name])
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown workload {name!r}; registered workloads: "
+            f"{available()}.  Define a Problem subclass and decorate it "
+            f"with @repro.core.problem.register({name!r}) to add one "
+            f"(DESIGN.md §14).")
+    return _REGISTRY[name]
+
+
+def available() -> Tuple[str, ...]:
+    """All known workload keys (registered + lazily importable)."""
+    return tuple(sorted(set(_REGISTRY) | set(_BUILTIN_MODULES)))
+
+
+# --------------------------------------------------------------------
+# Wiring derivation + the single entry point
+# --------------------------------------------------------------------
+
+_RUN_CONTROL_KEYS = ("max_iter", "tol", "chunk", "cost_every",
+                     "cost_window", "straggler_factor",
+                     "checkpoint_every", "checkpoint_fn")
+
+
+def derive_options(problem: Problem, base: RunOptions) -> RunOptions:
+    """The wiring derivation rules (DESIGN.md §14): map a Problem's
+    declared hooks + metadata onto the driver's step-variant fields.
+
+    1. ``light_step`` declared          -> ``step_fn_light`` (enables
+       integer ``cost_every`` skipping; required for it).
+    2. ``cost_every == "chunk"``        -> requires ``cost`` AND
+       ``light_step``; wires ``step_fn_cost`` so the driver picks
+       ``engine.make_chunk_cost_step`` (no per-iteration cond, one
+       objective evaluation per dispatch).  Otherwise ``step_fn_cost``
+       stays unset and the driver uses ``engine.make_scan_step``.
+    3. ``refresh_replicated`` declared  -> ``update_replicated``.
+    4. ``replicated_in_carry`` metadata -> ``light_updates_replicated``
+       (the light step feeds the broadcast update every iteration).
+    """
+    light = problem._declared("light_step")
+    cost = problem._declared("cost")
+    refresh = problem._declared("refresh_replicated")
+    per_chunk = base.cost_every == "chunk"
+    if per_chunk and (cost is None or light is None):
+        raise ValueError(
+            f'{type(problem).__name__}: cost_every="chunk" needs both a '
+            f"light_step and a standalone cost declaration")
+    if (not per_chunk and int(base.cost_every) > 1 and light is None):
+        raise ValueError(
+            f"{type(problem).__name__}: cost_every={base.cost_every} "
+            f"needs a light_step declaration (the cost-free iteration)")
+    if problem.replicated_in_carry and refresh is None:
+        raise ValueError(
+            f"{type(problem).__name__}: replicated_in_carry requires a "
+            f"refresh_replicated declaration")
+    if per_chunk and refresh is not None \
+            and not problem.replicated_in_carry:
+        # the chunk-cost scan body feeds update_replicated from the
+        # light step's aux output, but a bare-return light step (the
+        # non-carry contract) has none — the broadcast state would
+        # never advance inside the chunk
+        raise ValueError(
+            f'{type(problem).__name__}: cost_every="chunk" with '
+            f"refresh_replicated requires replicated_in_carry (the "
+            f"light_step must return (d', out_partial) to feed the "
+            f"broadcast update every iteration)")
+    return replace(base,
+                   step_fn_light=light,
+                   step_fn_cost=cost if per_chunk else None,
+                   update_replicated=refresh,
+                   light_updates_replicated=problem.replicated_in_carry)
+
+
+def _config_fingerprint(problem: Problem) -> str:
+    """Checkpoint-manifest fingerprint of the workload's config.
+
+    Excludes run-control fields (``max_iter``/``tol``): they never enter
+    the step math, and extending ``max_iter`` on resume is the canonical
+    continue-a-finished-run workflow."""
+    cfg = getattr(problem, "cfg", None)
+    if dataclasses.is_dataclass(cfg) and not isinstance(cfg, type):
+        kept = {k: v for k, v in sorted(dataclasses.asdict(cfg).items())
+                if k not in ("max_iter", "tol")}
+        return f"{type(cfg).__name__}({kept!r})"
+    return repr(cfg)
+
+
+def _as_problem(problem: Union[str, Problem, Type[Problem]],
+                cfg) -> Problem:
+    if isinstance(problem, str):
+        cls = get(problem)
+        return cls(cfg) if cfg is not None else cls()
+    if isinstance(problem, type) and issubclass(problem, Problem):
+        return problem(cfg) if cfg is not None else problem()
+    if not isinstance(problem, Problem):
+        raise TypeError(
+            f"solve() expects a workload key, Problem class, or Problem "
+            f"instance as its first argument, got "
+            f"{type(problem).__name__!r} (did you mean "
+            f'solve("<workload>", ..., cfg=...)?)')
+    if cfg is not None:
+        raise TypeError(
+            "cfg= is only valid with a workload key/class; the Problem "
+            "instance already carries its config")
+    return problem
+
+
+def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
+          cfg=None, mesh=None, options: Optional[RunOptions] = None,
+          checkpoint_dir=None, resume: Union[bool, int] = False,
+          **run_opts) -> Solution:
+    """The single entry point: configure, parallelize, iterate.
+
+    ``problem`` is a registry key (``"scdl"``), a Problem class, or an
+    instance (for workload-specific constructor args).  ``*inputs`` are
+    the raw input arrays, handed to ``problem.init_bundle``.
+
+    Run control: ``options=RunOptions(...)`` replaces the problem's
+    defaults wholesale; individual ``**run_opts`` (``max_iter=``,
+    ``tol=``, ``chunk=``, ``cost_every=``, ...) override field-wise on
+    top.  Step wiring is *derived* from the Problem declaration
+    (:func:`derive_options`) and cannot be passed here.
+
+    Checkpointing: ``checkpoint_dir=`` + ``checkpoint_every=k`` writes
+    an atomic full-state checkpoint (data + replicated, via
+    ``core.persistence.spill_bundle``) every k iterations;
+    ``resume=True`` (or an explicit step number) restores the latest
+    (or given) checkpoint from ``checkpoint_dir`` into the freshly
+    built bundle and continues iterating from there — the cost
+    trajectory continues exactly where the checkpointed run left off.
+    """
+    bad = set(run_opts) - set(_RUN_CONTROL_KEYS)
+    if bad:
+        raise TypeError(
+            f"solve() got unexpected run options {sorted(bad)}; valid: "
+            f"{list(_RUN_CONTROL_KEYS)}.  Step wiring "
+            f"(step_fn_light/step_fn_cost/update_replicated/...) is "
+            f"derived from the Problem declaration, not passed to "
+            f"solve().")
+    problem = _as_problem(problem, cfg)
+    if options is not None:
+        defaults = RunOptions()
+        wired = [f for f in ("step_fn_light", "step_fn_cost",
+                             "update_replicated",
+                             "light_updates_replicated")
+                 if getattr(options, f) != getattr(defaults, f)]
+        if wired:
+            raise TypeError(
+                f"options= carries step wiring {wired}, which solve() "
+                f"derives from the Problem declaration and would "
+                f"overwrite; declare the hooks on the Problem instead "
+                f"(DESIGN.md §14)")
+    opts = options if options is not None else problem.default_options()
+    opts = opts.merged_with(**run_opts)
+
+    bundle = problem.init_bundle(tuple(inputs), mesh)
+    start_iter = 0
+    writer = None
+    if checkpoint_dir is not None:
+        from pathlib import Path
+
+        from repro.checkpoint import checkpointer as ckpt
+        # the config fingerprint makes resuming under a *changed* config
+        # (same shapes, different lam/steps/...) fail loudly instead of
+        # silently mixing restored state with new step closures
+        meta = {"problem": problem.name or type(problem).__name__,
+                "config": _config_fingerprint(problem)}
+        if resume is not False:
+            latest = ckpt.latest_step(checkpoint_dir)
+            step = (resume if isinstance(resume, int)
+                    and not isinstance(resume, bool) else latest)
+            if step is None:
+                raise ValueError(
+                    f"resume=True but no checkpoints found under "
+                    f"{checkpoint_dir!r} — wrong directory, or the "
+                    f"first checkpoint was never written")
+            if not (Path(checkpoint_dir) / f"step_{step:08d}"
+                    / "manifest.json").exists():
+                raise ValueError(
+                    f"no checkpoint for step {step} under "
+                    f"{checkpoint_dir!r} (latest saved step: {latest})")
+            # shape/tree template only — checkpointer.restore reads
+            # leaf shapes and the treedef, never the values, so hand it
+            # the device arrays rather than a host spill of the bundle;
+            # the shardings put each leaf straight onto the mesh (no
+            # materialize-on-one-device step, elastic across topologies)
+            like = {"data": bundle.data, "replicated": bundle.replicated}
+            state, _ = ckpt.restore(
+                checkpoint_dir, step, like,
+                shardings=persistence.bundle_shardings(bundle),
+                expect_meta=lambda m: m.get("problem") == meta["problem"]
+                and m.get("config") == meta["config"])
+            bundle = bundle.with_data(state["data"],
+                                      replicated=state["replicated"])
+            start_iter = step
+        if opts.checkpoint_every and opts.checkpoint_fn is None:
+            # async writer + retention gc: the run blocks only for the
+            # host snapshot; .npy I/O overlaps the next chunks, and old
+            # steps are garbage-collected (Checkpointer keep=3)
+            writer = ckpt.Checkpointer(checkpoint_dir, meta=meta)
+
+            def checkpoint_fn(b: Bundle, i: int) -> None:
+                # i is the last completed iteration index -> i+1
+                # iterations are in the state being saved
+                writer.save_async(i + 1, persistence.spill_bundle(b))
+
+            opts = replace(opts, checkpoint_fn=checkpoint_fn)
+        elif not opts.checkpoint_every and opts.checkpoint_fn is None \
+                and resume is False:
+            raise ValueError(
+                "checkpoint_dir= given but neither checkpoint_every= "
+                "nor resume= requested — no checkpoint would ever be "
+                "read or written")
+    else:
+        if resume is not False:
+            raise ValueError("resume= requires checkpoint_dir=")
+        if opts.checkpoint_every and opts.checkpoint_fn is None:
+            raise ValueError(
+                "checkpoint_every= without checkpoint_dir= (or a "
+                "custom checkpoint_fn) would silently write nothing")
+
+    driver = IterativeDriver(problem.full_step, bundle,
+                             options=derive_options(problem, opts))
+    out = driver.run(start_iter=start_iter)
+    if writer is not None:
+        writer.wait()           # in-flight async writes land before
+    x, aux = problem.finalize(out, driver.log)   # the run is "done"
+    return Solution(x=x, aux=aux, log=driver.log, bundle=out,
+                    problem=problem)

@@ -17,9 +17,15 @@ re-usability property of the Bundle/Unbundle design.  The iteration loop
 itself runs chunked on-device (``chunk`` iterations per dispatch,
 DESIGN.md §12); ``make_light_step_fn`` is the cost-free step used to
 skip the objective evaluation off the ``cost_every`` grid.
+
+The workload is declared once as :class:`DeconvolutionProblem`
+(registered under ``"deconvolve"``, DESIGN.md §14) and run through the
+generic ``repro.core.problem.solve`` entry point; the original
+``deconvolve(...)`` signature survives as a deprecation shim over it.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Optional, Tuple
 
@@ -27,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bundle import Bundle, gather
-from repro.core.driver import IterativeDriver
+from repro.core.problem import Problem, register, solve
 from repro.imaging import lowrank as lr
 from repro.imaging import psf as psf_op
 from repro.imaging import starlet
@@ -108,15 +114,10 @@ def make_step_fn(cfg: SolverConfig):
                 cost_part = jax.lax.psum(cost_part, axes)
             return d_new, {"cost": cost_part}
         d_new = _lowrank_update(d, rep, axes, cfg)
-        # nuclear-norm cost via the same range finder (replicated SVD
-        # of the small projected matrix)
-        xf = d_new["Xp"].reshape(d_new["Xp"].shape[0], -1)
-        y = xf @ rep["omega"]
-        gram = y.T @ y
-        if axes:
-            gram = jax.lax.psum(gram, axes)
-        s2 = jnp.linalg.eigvalsh(gram)
-        nuc = jnp.sum(jnp.sqrt(jnp.maximum(s2, 0.0)))
+        # nuclear-norm cost via the same range finder
+        nuc = lr.nuclear_norm_rf(
+            d_new["Xp"].reshape(d_new["Xp"].shape[0], -1),
+            rep["omega"], axes)
         cost_part = data_cost_from(d_new["HX"], d["Y"])
         if axes:
             cost_part = jax.lax.psum(cost_part, axes)
@@ -140,19 +141,84 @@ def make_light_step_fn(cfg: SolverConfig):
     return step
 
 
+def make_cost_fn(cfg: SolverConfig):
+    """Standalone objective over the post-iteration state — the
+    ``cost_every="chunk"`` mode (``engine.make_chunk_cost_step``): the
+    scan body runs only the cost-free step and this evaluates once per
+    dispatch, off the carried forward model ``HX``."""
+
+    def cost(d, rep, axes):
+        data_part = data_cost_from(d["HX"], d["Y"])
+        if cfg.mode == "sparse":
+            W = jnp.swapaxes(d["W"], 0, 1)
+            reg = sparse_reg_cost(d["Xp"], W, cfg.n_scales)
+            total = data_part + reg
+            if axes:
+                total = jax.lax.psum(total, axes)
+            return {"cost": total}
+        if axes:
+            data_part = jax.lax.psum(data_part, axes)
+        nuc = lr.nuclear_norm_rf(d["Xp"].reshape(d["Xp"].shape[0], -1),
+                                 rep["omega"], axes)
+        return {"cost": data_part + cfg.lam * nuc}
+
+    return cost
+
+
+@register("deconvolve")
+class DeconvolutionProblem(Problem):
+    """Algorithm 1, declared once (DESIGN.md §14).
+
+    ``cfg.mode`` selects the regulariser: ``"sparse"`` (starlet + noise-
+    adaptive weights) or ``"lowrank"`` (distributed randomized SVT).
+    The broadcast state (step sizes, SVT test matrix) is constant across
+    iterations, so there is no ``refresh_replicated`` and the light step
+    returns bare data (``replicated_in_carry`` stays False).
+    """
+
+    def __init__(self, cfg: Optional[SolverConfig] = None,
+                 sigma_noise: float = 0.02):
+        self.cfg = cfg if cfg is not None else SolverConfig()
+        self.sigma_noise = sigma_noise
+        self._step = make_step_fn(self.cfg)
+        self._light = make_light_step_fn(self.cfg)
+        self._cost = make_cost_fn(self.cfg)
+
+    def init_bundle(self, inputs, mesh) -> Bundle:
+        Y, psfs = inputs
+        bundle, _ = build_bundle(Y, psfs, self.cfg, mesh=mesh,
+                                 sigma_noise=self.sigma_noise)
+        return bundle
+
+    def full_step(self, d, rep, axes):
+        return self._step(d, rep, axes)
+
+    def light_step(self, d, rep, axes):
+        return self._light(d, rep, axes)
+
+    def cost(self, d, rep, axes):
+        return self._cost(d, rep, axes)
+
+    def finalize(self, bundle, log):
+        return gather(bundle)["Xp"], {}
+
+
 def deconvolve(Y, psfs, cfg: SolverConfig, mesh=None,
                sigma_noise: float = 0.02,
                max_iter: Optional[int] = None,
                tol: Optional[float] = None,
                chunk: int = 8, cost_every: int = 1):
-    """End-to-end Algorithm 1. Returns (X*, driver log)."""
-    bundle, _ = build_bundle(Y, psfs, cfg, mesh=mesh,
-                             sigma_noise=sigma_noise)
-    driver = IterativeDriver(
-        make_step_fn(cfg), bundle,
-        max_iter=max_iter or cfg.max_iter,
-        tol=cfg.tol if tol is None else tol,
-        chunk=chunk, cost_every=cost_every,
-        step_fn_light=make_light_step_fn(cfg))
-    out = driver.run()
-    return gather(out)["Xp"], driver.log
+    """End-to-end Algorithm 1. Returns (X*, driver log).
+
+    .. deprecated:: PR 4
+        Thin shim over ``solve(DeconvolutionProblem(cfg), Y, psfs)``
+        (bit-identical wiring); use the ``solve()`` entry point.
+    """
+    warnings.warn(
+        "deconvolve(...) is deprecated; use repro.core.problem.solve("
+        '"deconvolve", Y, psfs, cfg=cfg, ...) (DESIGN.md §14)',
+        DeprecationWarning, stacklevel=2)
+    sol = solve(DeconvolutionProblem(cfg, sigma_noise=sigma_noise),
+                Y, psfs, mesh=mesh, max_iter=max_iter,
+                tol=tol, chunk=chunk, cost_every=cost_every)
+    return sol.x, sol.log

@@ -44,6 +44,7 @@ least-squares solve X = (S W^T)(phi + delta I)^-1 that this abbreviates
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -52,7 +53,7 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from repro.core.bundle import Bundle
-from repro.core.driver import IterativeDriver
+from repro.core.problem import Problem, register, solve
 from repro.kernels.admm_elwise.ops import admm_elwise
 from repro.kernels.dict_outer.ops import dict_outer_pair
 
@@ -299,6 +300,49 @@ def make_refresh_fn(cfg: SCDLConfig):
     return refresh
 
 
+@register("scdl")
+class SCDLProblem(Problem):
+    """Algorithm 2, declared once (DESIGN.md §14).
+
+    The dictionaries (and their factor-once solve operators) are part of
+    the iterate, not of the objective — ``replicated_in_carry`` makes
+    the derived wiring advance the broadcast state on *every* iteration
+    (``light_updates_replicated``), and the declared ``cost`` enables
+    the per-chunk objective mode ``cost_every="chunk"``.
+    """
+
+    replicated_in_carry = True
+
+    def __init__(self, cfg: Optional[SCDLConfig] = None, key=None):
+        self.cfg = cfg if cfg is not None else SCDLConfig()
+        self.key = key
+        self._step = make_step_fn(self.cfg)
+        self._light = make_light_step_fn(self.cfg)
+        self._cost = make_cost_fn(self.cfg)
+        self._refresh = make_refresh_fn(self.cfg)
+
+    def init_bundle(self, inputs, mesh) -> Bundle:
+        S_h, S_l = inputs
+        return build_bundle(S_h, S_l, self.cfg, mesh=mesh, key=self.key)
+
+    def full_step(self, d, rep, axes):
+        return self._step(d, rep, axes)
+
+    def light_step(self, d, rep, axes):
+        return self._light(d, rep, axes)
+
+    def cost(self, d, rep, axes):
+        return self._cost(d, rep, axes)
+
+    def refresh_replicated(self, rep, out):
+        return self._refresh(rep, out)
+
+    def finalize(self, bundle, log):
+        Xh = jax.device_get(bundle.replicated["Xh"])
+        Xl = jax.device_get(bundle.replicated["Xl"])
+        return (Xh, Xl), {}
+
+
 def train(S_h, S_l, cfg: SCDLConfig, mesh=None, key=None,
           max_iter: Optional[int] = None, chunk: int = 8,
           cost_every=1):
@@ -309,19 +353,17 @@ def train(S_h, S_l, cfg: SCDLConfig, mesh=None, key=None,
     last evaluated value forward, DESIGN.md §12).  ``cost_every="chunk"``
     is the fastest observability mode: one objective evaluation per
     dispatched chunk, on its final state — the granularity the driver
-    checks convergence at anyway (DESIGN.md §13)."""
-    per_chunk = cost_every == "chunk"
-    bundle = build_bundle(S_h, S_l, cfg, mesh=mesh, key=key)
-    driver = IterativeDriver(make_step_fn(cfg), bundle,
-                             max_iter=max_iter or cfg.max_iter,
-                             tol=cfg.tol, chunk=chunk,
-                             cost_every=1 if per_chunk else cost_every,
-                             update_replicated=make_refresh_fn(cfg),
-                             step_fn_light=make_light_step_fn(cfg),
-                             light_updates_replicated=True,
-                             step_fn_cost=(make_cost_fn(cfg)
-                                           if per_chunk else None))
-    out = driver.run()
-    Xh = jax.device_get(out.replicated["Xh"])
-    Xl = jax.device_get(out.replicated["Xl"])
-    return Xh, Xl, driver.log
+    checks convergence at anyway (DESIGN.md §13).
+
+    .. deprecated:: PR 4
+        Thin shim over ``solve(SCDLProblem(cfg, key), S_h, S_l)``
+        (bit-identical wiring); use the ``solve()`` entry point.
+    """
+    warnings.warn(
+        "scdl.train(...) is deprecated; use repro.core.problem.solve("
+        '"scdl", S_h, S_l, cfg=cfg, ...) (DESIGN.md §14)',
+        DeprecationWarning, stacklevel=2)
+    sol = solve(SCDLProblem(cfg, key=key), S_h, S_l, mesh=mesh,
+                max_iter=max_iter, chunk=chunk, cost_every=cost_every)
+    Xh, Xl = sol.x
+    return Xh, Xl, sol.log

@@ -1,0 +1,31 @@
+"""The workload registry, as a package: ``repro.problems``.
+
+    from repro import problems
+    problems.list()                    # ('deconvolve', 'lowrank', 'scdl')
+    cls = problems.get("scdl")         # -> SCDLProblem
+    sol = problems.solve("scdl", S_h, S_l, cfg=SCDLConfig(...))
+
+Thin façade over :mod:`repro.core.problem` (where the registry and the
+``solve()`` entry point live so imaging modules can register themselves
+without an import cycle).  Importing this package eagerly loads the
+built-in workloads, so ``list()`` reflects everything registered.
+"""
+from repro.core.problem import (Problem, RunOptions, Solution, available,
+                                derive_options, get, register, solve)
+
+# eager-register the built-in workloads (core.problem also lazily
+# imports these on get(); doing it here keeps list() complete even for
+# keys added by future modules that register at import time)
+from repro.imaging import deconvolve as _deconvolve  # noqa: F401
+from repro.imaging import lowrank as _lowrank        # noqa: F401
+from repro.imaging import scdl as _scdl              # noqa: F401
+
+
+def list() -> tuple:
+    """All registered workload keys (shadows the builtin deliberately —
+    this namespace is the registry)."""
+    return available()
+
+
+__all__ = ["Problem", "RunOptions", "Solution", "available",
+           "derive_options", "get", "list", "register", "solve"]

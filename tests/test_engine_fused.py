@@ -8,13 +8,30 @@ import numpy as np
 import pytest
 
 from repro.core.bundle import Bundle
-from repro.core.driver import IterativeDriver
+from repro.core.driver import IterativeDriver, RunOptions
 from repro.core.engine import make_scan_step
+from repro.core.problem import solve as solve_problem
 from repro.data.synthetic import coupled_patches
 from repro.imaging import psf as psf_op
 from repro.imaging.condat import SolverConfig, solve
-from repro.imaging.deconvolve import deconvolve
-from repro.imaging.scdl import SCDLConfig, train
+from repro.imaging.deconvolve import DeconvolutionProblem
+from repro.imaging.scdl import SCDLConfig, SCDLProblem
+
+
+def deconvolve(Y, psfs, cfg, sigma_noise=0.02, **kw):
+    """Drive Algorithm 1 through solve() (the shim-free path; the
+    deprecated legacy signatures are covered by test_problem_api)."""
+    sol = solve_problem(DeconvolutionProblem(cfg, sigma_noise=sigma_noise),
+                        Y, psfs, **kw)
+    return sol.x, sol.log
+
+
+def train(S_h, S_l, cfg, **kw):
+    """Drive Algorithm 2 through solve()."""
+    sol = solve_problem(SCDLProblem(cfg), S_h, S_l, **kw)
+    Xh, Xl = sol.x
+    return Xh, Xl, sol.log
+
 
 KEY = jax.random.PRNGKey(2)
 N_ITER = 12
@@ -193,8 +210,9 @@ def test_driver_chunked_convergence_and_log():
                    "w": rep["w"] - 0.3 * grad}
 
     driver = IterativeDriver(
-        step, bundle, max_iter=200, tol=1e-6, chunk=8,
-        update_replicated=lambda rep, out: {"w": out["w"]})
+        step, bundle, options=RunOptions(
+            max_iter=200, tol=1e-6, chunk=8,
+            update_replicated=lambda rep, out: {"w": out["w"]}))
     out = driver.run()
     assert driver.log.converged_at is not None
     assert (driver.log.converged_at + 1) % 8 == 0

@@ -1,0 +1,426 @@
+"""Problem-API tests (DESIGN.md §14): the workload registry, the
+``solve()`` entry point and its wiring derivation, the legacy-signature
+deprecation shims (bit-identical results), the RunOptions compatibility
+path, and the checkpoint/restore round-trip through
+``core/persistence.py``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import problems
+from repro.core.bundle import Bundle
+from repro.core.driver import IterativeDriver, RunOptions
+from repro.core.problem import Problem, derive_options, register, solve
+from repro.data.synthetic import coupled_patches
+from repro.imaging import psf as psf_op
+from repro.imaging.condat import SolverConfig
+from repro.imaging.deconvolve import DeconvolutionProblem, deconvolve
+from repro.imaging.lowrank import CompletionConfig, LowRankCompletionProblem
+from repro.imaging.scdl import SCDLConfig, SCDLProblem, train
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def psf_data():
+    return psf_op.simulate(8, jax.random.PRNGKey(2))
+
+
+@pytest.fixture(scope="module")
+def scdl_data():
+    return coupled_patches(256, 25, 9, 16, seed=5)
+
+
+# ------------------------------------------------------------ registry
+def test_registry_lists_all_workloads():
+    keys = problems.list()
+    for k in ("deconvolve", "lowrank", "scdl"):
+        assert k in keys
+    assert problems.get("deconvolve") is DeconvolutionProblem
+    assert problems.get("scdl") is SCDLProblem
+    assert problems.get("lowrank") is LowRankCompletionProblem
+    for k in keys:
+        assert issubclass(problems.get(k), Problem)
+        assert problems.get(k).name == k
+
+
+def test_registry_unknown_key_raises_helpful_error():
+    with pytest.raises(KeyError) as exc:
+        problems.get("no_such_workload")
+    msg = str(exc.value)
+    assert "no_such_workload" in msg
+    for k in ("deconvolve", "lowrank", "scdl"):
+        assert k in msg            # the error names what IS available
+    assert "register" in msg       # ...and how to add one
+
+
+def test_register_validates():
+    with pytest.raises(TypeError):
+        register("bogus")(object)  # not a Problem subclass
+
+    class Dupe(Problem):
+        pass
+
+    with pytest.raises(ValueError, match="already registered"):
+        register("scdl")(Dupe)
+
+
+# ------------------------------------------------- deprecation shims
+def test_deconvolve_shim_warns_and_matches_solve(psf_data):
+    cfg = SolverConfig(mode="sparse", n_scales=3)
+    sol = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                max_iter=6, tol=0, chunk=4)
+    with pytest.deprecated_call():
+        X_old, log_old = deconvolve(psf_data.Y, psf_data.psfs, cfg,
+                                    max_iter=6, tol=0, chunk=4)
+    # the shim routes through solve(): bit-identical, not merely close
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(X_old))
+    np.testing.assert_array_equal(sol.log.costs, log_old.costs)
+
+
+def test_train_shim_warns_and_matches_solve(scdl_data):
+    S_h, S_l = scdl_data
+    cfg = SCDLConfig(n_atoms=16, max_iter=6)
+    sol = solve("scdl", S_h, S_l, cfg=cfg, chunk=4)
+    with pytest.deprecated_call():
+        Xh, Xl, log_old = train(S_h, S_l, cfg, chunk=4)
+    np.testing.assert_array_equal(np.asarray(sol.x[0]), Xh)
+    np.testing.assert_array_equal(np.asarray(sol.x[1]), Xl)
+    np.testing.assert_array_equal(sol.log.costs, log_old.costs)
+
+
+def _ridge_bundle_and_step():
+    X = jax.random.normal(KEY, (64, 4))
+    y = X @ jnp.arange(1.0, 5.0)
+    bundle = Bundle.create({"X": X, "y": y},
+                           replicated={"w": jnp.zeros((4,))})
+
+    def step(d, rep, axes):
+        r = d["X"] @ rep["w"] - d["y"]
+        grad = d["X"].T @ r / d["X"].shape[0]
+        return d, {"cost": 0.5 * jnp.sum(r ** 2),
+                   "w": rep["w"] - 0.1 * grad}
+
+    return bundle, step
+
+
+def test_driver_legacy_kwargs_warn_and_match_options():
+    bundle, step = _ridge_bundle_and_step()
+    upd = lambda rep, out: {"w": out["w"]}
+    with pytest.deprecated_call():
+        legacy = IterativeDriver(step, bundle, max_iter=8, tol=0,
+                                 chunk=4, update_replicated=upd)
+    legacy_out = legacy.run()
+    bundle2, step2 = _ridge_bundle_and_step()
+    opt = IterativeDriver(step2, bundle2, options=RunOptions(
+        max_iter=8, tol=0, chunk=4, update_replicated=upd))
+    opt_out = opt.run()
+    np.testing.assert_array_equal(legacy.log.costs, opt.log.costs)
+    np.testing.assert_array_equal(np.asarray(legacy_out.replicated["w"]),
+                                  np.asarray(opt_out.replicated["w"]))
+
+
+def test_driver_unknown_kwarg_raises():
+    bundle, step = _ridge_bundle_and_step()
+    with pytest.raises(TypeError, match="step_fm_light"):
+        IterativeDriver(step, bundle, step_fm_light=lambda *a: None)
+
+
+def test_driver_integer_cost_every_rejects_cost_fn():
+    """An integer cadence + a step_fn_cost is a wiring contradiction
+    (the function would be dead): fail loudly instead of silently
+    picking one of the two modes."""
+    bundle, step = _ridge_bundle_and_step()
+    with pytest.raises(ValueError, match='cost_every="chunk"'):
+        IterativeDriver(step, bundle, options=RunOptions(
+            max_iter=8, tol=0, chunk=4, cost_every=2,
+            step_fn_light=lambda d, r, a: d,
+            step_fn_cost=lambda d, r, a: jnp.float32(-1.0)))
+
+
+def test_cost_every_typo_raises():
+    with pytest.raises(ValueError, match="chunk"):
+        RunOptions(cost_every="Chunk")
+
+
+def test_solve_rejects_non_problem_argument(psf_data):
+    """Passing the config where the problem goes must fail with a
+    guided error, not an opaque AttributeError downstream."""
+    with pytest.raises(TypeError, match="workload key"):
+        solve(SolverConfig(mode="sparse"), psf_data.Y, psf_data.psfs)
+
+
+def test_driver_chunk_cost_requires_both_steps():
+    """cost_every="chunk" with only one half of the contract must fail
+    loudly instead of silently evaluating the objective every
+    iteration."""
+    bundle, step = _ridge_bundle_and_step()
+    with pytest.raises(ValueError, match="step_fn_light"):
+        IterativeDriver(step, bundle, options=RunOptions(
+            cost_every="chunk", step_fn_cost=lambda d, r, a: 0.0))
+    with pytest.raises(ValueError, match="step_fn_cost"):
+        IterativeDriver(step, bundle, options=RunOptions(
+            cost_every="chunk", step_fn_light=lambda d, r, a: d))
+
+
+# ------------------------------------------------- wiring derivation
+def test_solve_rejects_wiring_kwargs(psf_data):
+    with pytest.raises(TypeError, match="derived from the Problem"):
+        solve("deconvolve", psf_data.Y, psf_data.psfs,
+              cfg=SolverConfig(mode="sparse", n_scales=3),
+              step_fn_light=lambda *a: None)
+
+
+def test_derive_options_enforces_declarations():
+    class NoLight(Problem):
+        def full_step(self, d, rep, axes):
+            return d, jnp.float32(0.0)
+
+    with pytest.raises(ValueError, match="light_step"):
+        derive_options(NoLight(), RunOptions(cost_every=4))
+    with pytest.raises(ValueError, match="cost"):
+        derive_options(NoLight(), RunOptions(cost_every="chunk"))
+
+    class Carry(NoLight):
+        replicated_in_carry = True
+
+    with pytest.raises(ValueError, match="refresh_replicated"):
+        derive_options(Carry(), RunOptions())
+
+    class BareLightRefresh(NoLight):
+        # refresh declared but NOT in-carry: the light step returns
+        # bare d', so the chunk-cost scan could never feed the update
+        def light_step(self, d, rep, axes):
+            return d
+
+        def cost(self, d, rep, axes):
+            return jnp.float32(0.0)
+
+        def refresh_replicated(self, rep, out):
+            return rep
+
+    with pytest.raises(ValueError, match="replicated_in_carry"):
+        derive_options(BareLightRefresh(), RunOptions(cost_every="chunk"))
+
+
+@pytest.mark.parametrize("mode", ["sparse", "lowrank"])
+def test_deconvolve_per_chunk_cost_mode(psf_data, mode):
+    """The generalized chunk-granular objective (bare-return light step,
+    no broadcast update): chunk-final entries match the every-iteration
+    run, earlier slots carry the previous evaluation (+inf first)."""
+    cfg = SolverConfig(mode=mode, n_scales=3, lam=0.05, rank=8)
+    sol1 = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                 max_iter=12, tol=0, chunk=5, cost_every=1)
+    solc = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                 max_iter=12, tol=0, chunk=5, cost_every="chunk")
+    np.testing.assert_allclose(np.asarray(solc.x), np.asarray(sol1.x),
+                               rtol=1e-6, atol=1e-7)
+    c1, cc = np.asarray(sol1.log.costs), np.asarray(solc.log.costs)
+    assert len(cc) == 12
+    for i in (4, 9, 11):           # chunk-final iterations (12 = 5+5+2)
+        np.testing.assert_allclose(cc[i], c1[i], rtol=1e-5)
+    assert np.isinf(cc[0]) and cc[5] == cc[4]
+
+
+# --------------------------------------------- third workload: lowrank
+def test_lowrank_completion_recovers():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    A = jax.random.normal(k1, (64, 4)) @ jax.random.normal(k2, (4, 48))
+    M = (jax.random.uniform(k3, A.shape) < 0.6).astype(A.dtype)
+    # the range finder must overshoot the target rank comfortably: the
+    # masked residual raises the iterate's rank above r between SVTs
+    cfg = CompletionConfig(rank=12, oversample=12, lam=0.2, step=0.9,
+                           max_iter=300)
+    sol = solve("lowrank", A, M, cfg=cfg, tol=0)
+    err0 = float(jnp.linalg.norm(M * A - A) / jnp.linalg.norm(A))
+    err = float(np.linalg.norm(sol.x - np.asarray(A))
+                / np.linalg.norm(np.asarray(A)))
+    assert err < 0.1 * err0        # ~0.61 -> ~0.02 at these settings
+    assert sol.log.costs[-1] < sol.log.costs[0]
+
+
+def test_lowrank_completion_chunked_matches_per_step():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    A = jax.random.normal(k1, (32, 3)) @ jax.random.normal(k2, (3, 24))
+    M = (jax.random.uniform(k3, A.shape) < 0.7).astype(A.dtype)
+    cfg = CompletionConfig(rank=6, lam=0.05, max_iter=12)
+    sol1 = solve("lowrank", A, M, cfg=cfg, tol=0, chunk=1)
+    solk = solve("lowrank", A, M, cfg=cfg, tol=0, chunk=5)
+    np.testing.assert_allclose(solk.log.costs, sol1.log.costs, rtol=1e-5)
+    np.testing.assert_allclose(solk.x, sol1.x, rtol=1e-4, atol=1e-5)
+    # integer skipping and per-chunk objective also wire up (light+cost)
+    sol3 = solve("lowrank", A, M, cfg=cfg, tol=0, chunk=4, cost_every=3)
+    np.testing.assert_allclose(np.asarray(sol3.log.costs)[::3],
+                               np.asarray(sol1.log.costs)[::3], rtol=1e-5)
+    solc = solve("lowrank", A, M, cfg=cfg, tol=0, chunk=4,
+                 cost_every="chunk")
+    np.testing.assert_allclose(np.asarray(solc.log.costs)[3::4],
+                               np.asarray(sol1.log.costs)[3::4],
+                               rtol=1e-5)
+
+
+# ------------------------------------------- checkpoint/restore e2e
+def test_checkpoint_roundtrip_scdl(tmp_path, scdl_data):
+    """solve(checkpoint_every=k) then resume into a fresh solve: the
+    cost trajectory continues exactly where the first run left off —
+    covers core/persistence.spill_bundle/restore_bundle end-to-end,
+    including the broadcast carry (dictionaries + solve factors)."""
+    S_h, S_l = scdl_data
+    cfg = SCDLConfig(n_atoms=16, max_iter=12)
+    full = solve("scdl", S_h, S_l, cfg=cfg, chunk=4, tol=0)
+    d = tmp_path / "ckpt_scdl"
+    part = solve("scdl", S_h, S_l, cfg=cfg, chunk=4, tol=0, max_iter=8,
+                 checkpoint_dir=d, checkpoint_every=4)
+    assert len(part.log.costs) == 8
+    assert sorted(p.name for p in d.iterdir()) == [
+        "step_00000004", "step_00000008"]
+    rest = solve("scdl", S_h, S_l, cfg=cfg, chunk=4, tol=0, max_iter=12,
+                 checkpoint_dir=d, resume=True)
+    np.testing.assert_allclose(rest.log.costs, full.log.costs[8:],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(rest.x[0]),
+                               np.asarray(full.x[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_checkpoint_roundtrip_deconvolve(tmp_path, psf_data):
+    """Same round-trip for a workload whose iterate is all data-side
+    (no broadcast carry), resuming from an explicit step."""
+    cfg = SolverConfig(mode="sparse", n_scales=3)
+    d = tmp_path / "ckpt_psf"
+    full = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                 max_iter=12, tol=0, chunk=4)
+    solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+          max_iter=8, tol=0, chunk=4, checkpoint_dir=d,
+          checkpoint_every=8)
+    rest = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                 max_iter=12, tol=0, chunk=4, checkpoint_dir=d,
+                 resume=8)
+    np.testing.assert_allclose(rest.log.costs, full.log.costs[8:],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(rest.x), np.asarray(full.x),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_checkpoint_meta_guards_workload(tmp_path, psf_data, scdl_data):
+    """A checkpoint written by one workload refuses to restore into
+    another (manifest meta check)."""
+    S_h, S_l = scdl_data
+    d = tmp_path / "ckpt_guard"
+    solve("scdl", S_h, S_l, cfg=SCDLConfig(n_atoms=16, max_iter=4),
+          chunk=4, tol=0, checkpoint_dir=d, checkpoint_every=4)
+    with pytest.raises(ValueError, match="meta"):
+        solve("deconvolve", psf_data.Y, psf_data.psfs,
+              cfg=SolverConfig(mode="sparse", n_scales=3),
+              max_iter=6, tol=0, checkpoint_dir=d, resume=True)
+
+
+def test_checkpoint_meta_guards_config(tmp_path, scdl_data):
+    """Resuming under a *changed* config (same shapes!) must fail
+    loudly — the manifest carries a config fingerprint."""
+    S_h, S_l = scdl_data
+    d = tmp_path / "ckpt_cfg"
+    solve("scdl", S_h, S_l, cfg=SCDLConfig(n_atoms=16, max_iter=4),
+          chunk=4, tol=0, checkpoint_dir=d, checkpoint_every=4)
+    with pytest.raises(ValueError, match="meta"):
+        solve("scdl", S_h, S_l,
+              cfg=SCDLConfig(n_atoms=16, max_iter=8, lam_h=0.5),
+              chunk=4, tol=0, checkpoint_dir=d, resume=True)
+    # ...but run-control fields (max_iter/tol) are excluded from the
+    # fingerprint: extending the budget on resume is the canonical
+    # continue-a-finished-run workflow
+    rest = solve("scdl", S_h, S_l,
+                 cfg=SCDLConfig(n_atoms=16, max_iter=6),
+                 chunk=4, tol=0, checkpoint_dir=d, resume=True)
+    assert len(rest.log.costs) == 2  # iterations 4..6
+
+
+def test_resume_missing_step_raises(tmp_path, scdl_data):
+    S_h, S_l = scdl_data
+    d = tmp_path / "ckpt_step"
+    solve("scdl", S_h, S_l, cfg=SCDLConfig(n_atoms=16, max_iter=4),
+          chunk=4, tol=0, checkpoint_dir=d, checkpoint_every=4)
+    with pytest.raises(ValueError, match="latest saved step"):
+        solve("scdl", S_h, S_l, cfg=SCDLConfig(n_atoms=16, max_iter=8),
+              chunk=4, tol=0, checkpoint_dir=d, resume=12)
+
+
+def test_resume_without_dir_raises(psf_data):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        solve("deconvolve", psf_data.Y, psf_data.psfs,
+              cfg=SolverConfig(mode="sparse", n_scales=3), resume=True)
+
+
+def test_resume_from_empty_dir_raises(tmp_path, psf_data):
+    """A mistyped/never-written checkpoint directory must fail loudly,
+    not silently recompute from iteration 0."""
+    with pytest.raises(ValueError, match="no checkpoints"):
+        solve("deconvolve", psf_data.Y, psf_data.psfs,
+              cfg=SolverConfig(mode="sparse", n_scales=3),
+              checkpoint_dir=tmp_path / "nowhere", resume=True)
+
+
+def test_checkpoint_every_without_dir_raises(psf_data):
+    """checkpoint_every with nowhere to write must fail loudly, not
+    silently produce an unrecoverable run."""
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        solve("deconvolve", psf_data.Y, psf_data.psfs,
+              cfg=SolverConfig(mode="sparse", n_scales=3),
+              max_iter=4, checkpoint_every=2)
+
+
+def test_checkpoint_dir_without_cadence_or_resume_raises(tmp_path,
+                                                         psf_data):
+    """The converse asymmetry: a checkpoint_dir that would never be
+    read or written signals a mistake."""
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        solve("deconvolve", psf_data.Y, psf_data.psfs,
+              cfg=SolverConfig(mode="sparse", n_scales=3),
+              max_iter=4, checkpoint_dir=tmp_path / "ckpt")
+
+
+def test_options_with_wiring_fields_rejected(psf_data):
+    with pytest.raises(TypeError, match="step wiring"):
+        solve("deconvolve", psf_data.Y, psf_data.psfs,
+              cfg=SolverConfig(mode="sparse", n_scales=3),
+              options=RunOptions(max_iter=4,
+                                 update_replicated=lambda r, o: r))
+
+
+# ------------------------------------------------- custom problems
+def test_custom_problem_through_solve():
+    """The quickstart promise: a new workload is one small declaration —
+    replicated-carry ridge regression converging through solve()."""
+
+    class Ridge(Problem):
+        replicated_in_carry = True
+
+        def init_bundle(self, inputs, mesh):
+            X, y = inputs
+            return Bundle.create(
+                {"X": X, "y": y},
+                replicated={"w": jnp.zeros(X.shape[1], X.dtype)})
+
+        def full_step(self, d, rep, axes):
+            r = d["X"] @ rep["w"] - d["y"]
+            grad = d["X"].T @ r
+            n = jnp.float32(d["X"].shape[0])
+            if axes:
+                grad = jax.lax.psum(grad, axes)
+                n = jax.lax.psum(n, axes)
+            return d, {"cost": 0.5 * jnp.sum(r ** 2),
+                       "w": rep["w"] - 0.3 * grad / n}
+
+        def refresh_replicated(self, rep, out):
+            return dict(rep, w=out["w"])
+
+        def finalize(self, bundle, log):
+            return np.asarray(jax.device_get(bundle.replicated["w"])), {}
+
+    X = jax.random.normal(KEY, (32, 3))
+    y = X @ jnp.ones((3,))
+    sol = solve(Ridge(), X, y, max_iter=200, tol=1e-6, chunk=8)
+    assert sol.log.converged_at is not None
+    np.testing.assert_allclose(sol.x, np.ones(3), rtol=1e-2)
+    assert sol.costs == sol.log.costs
