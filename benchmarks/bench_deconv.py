@@ -1,0 +1,194 @@
+"""Deconvolution hot-path benchmark: pre-PR sparse path vs the
+paired-FFT engine (DESIGN.md §16).
+
+The baseline is the PRE-overhaul implementation frozen verbatim below —
+NOT the original seed (that is ``bench_driver``'s baseline): batched
+starlet kernel, PSF kernel FFTs cached at the hardcoded 96-grid,
+carried forward model, but a conjugation per adjoint, TWO starlet
+forwards per cost iteration (X_bar for the dual, X_new for the
+objective) and ~6 separately-rooted elementwise passes.  The new path
+runs the derived fast pad (81 for S = 41, 29% fewer FFT points), the
+carried (kf, conj kf) spectrum pair, ONE starlet forward per iteration
+(Phi(X_bar) = 2 Phi(X_new) - Phi(X) off the carried stack, which also
+serves the objective) and the fused ``condat_elwise`` tails.
+
+Both variants share the same step sizes and run through the same
+chunked driver; trajectories are asserted equal (rtol 1e-4, pure fp32
+reassociation apart) on the warm-up round, then timing rounds
+interleave the variants (bench_driver methodology).  The acceptance
+gate is >= 1.3x per-iteration on the full-size run; the
+``cost_every="chunk"`` row additionally shows the fastest observability
+mode (its objective is a weighted reduction of the carried stacks — no
+transform at all in the cost step).
+
+    PYTHONPATH=src python -m benchmarks.bench_deconv [--smoke]
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (ROUND_ITERS, emit, timed_round,
+                               write_bench_json)
+from repro.core.bundle import Bundle
+from repro.core.driver import IterativeDriver, RunOptions
+from repro.imaging import psf as psf_op
+from repro.imaging.condat import (SolverConfig, solve, step_sizes,
+                                  weight_matrix)
+from repro.imaging.deconvolve import (build_bundle, make_cost_fn,
+                                      make_light_step_fn, make_step_fn)
+from repro.kernels.starlet2d import ops as starlet_batch
+
+_PRE_PAD = 96                    # the pre-PR hardcoded FFT grid, frozen
+
+
+def _pre_fft_kernel(psfs):
+    h = psfs.shape[-2]
+    padded = jnp.zeros(psfs.shape[:-2] + (_PRE_PAD, _PRE_PAD), psfs.dtype)
+    padded = padded.at[..., :h, :h].set(psfs)
+    return jnp.fft.rfft2(jnp.roll(padded, (-(h // 2), -(h // 2)),
+                                  axis=(-2, -1)))
+
+
+def _pre_conv_f(x, kf, adjoint=False):
+    s = x.shape[-1]
+    xf = jnp.fft.rfft2(x, s=(_PRE_PAD, _PRE_PAD))
+    if adjoint:
+        kf = jnp.conj(kf)                 # conjugation on the hot path
+    return jnp.fft.irfft2(xf * kf, s=(_PRE_PAD, _PRE_PAD))[..., :s, :s]
+
+
+def _pre_sparse_update(d, rep, cfg):
+    U = jnp.swapaxes(d["Xd"], 0, 1)
+    W = jnp.swapaxes(d["W"], 0, 1)
+    U_adj = starlet_batch.adjoint(U, cfg.n_scales)
+    grad = _pre_conv_f(d["HX"] - d["Y"], d["psf_f"], adjoint=True)
+    X_new = jnp.maximum(d["Xp"] - rep["tau"] * grad
+                        - rep["tau"] * U_adj, 0.0)
+    X_bar = 2 * X_new - d["Xp"]
+    V = U + rep["sig"] * starlet_batch.forward(X_bar, cfg.n_scales)
+    U_new = jnp.clip(V, -W, W)
+    return dict(d, Xp=X_new, Xd=jnp.swapaxes(U_new, 0, 1),
+                HX=_pre_conv_f(X_new, d["psf_f"])), W
+
+
+def make_pre_step_fn(cfg: SolverConfig):
+    """The pre-PR per-iteration math, frozen verbatim: the objective
+    re-runs the starlet forward on X_new every evaluated iteration."""
+    def step(d, rep, axes):
+        d_new, W = _pre_sparse_update(d, rep, cfg)
+        cost = 0.5 * jnp.sum((d["Y"] - d_new["HX"]) ** 2) + \
+            jnp.sum(jnp.abs(W * starlet_batch.forward(d_new["Xp"],
+                                                      cfg.n_scales)))
+        if axes:
+            cost = jax.lax.psum(cost, axes)
+        return d_new, {"cost": cost}
+
+    return step
+
+
+def make_pre_light_step_fn(cfg: SolverConfig):
+    def step(d, rep, axes):
+        d_new, _ = _pre_sparse_update(d, rep, cfg)
+        return d_new
+
+    return step
+
+
+def _pre_bundle(data, cfg, tau, sig):
+    kf = _pre_fft_kernel(data.psfs)
+    X0 = _pre_conv_f(data.Y, kf, adjoint=True)
+    W = weight_matrix(data.psfs, data.sigma, cfg.n_scales, cfg.k_sigma)
+    d = {"Y": data.Y, "psf_f": kf, "Xp": X0,
+         "HX": _pre_conv_f(X0, kf),
+         "W": jnp.swapaxes(W, 0, 1),
+         "Xd": jnp.zeros((data.Y.shape[0], cfg.n_scales)
+                         + data.Y.shape[1:])}
+    return Bundle.create(d, replicated={"tau": jnp.float32(tau),
+                                        "sig": jnp.float32(sig)})
+
+
+def run(n: int = 64, iters: int = 96, rounds: int = 6, chunk: int = 8,
+        smoke: bool = False) -> None:
+    if smoke:
+        n, iters, rounds = 32, 32, 3
+    data = psf_op.simulate(n, jax.random.PRNGKey(1))
+    cfg = SolverConfig(mode="sparse", n_scales=3)
+    kf_pair = psf_op.psf_fft_pair(data.psfs)
+    tau, sig, _ = step_sizes(data.Y, data.psfs, cfg, data.sigma,
+                             kf_pair=kf_pair)
+    _, costs_ref = solve(data.Y, data.psfs, cfg, sigma_noise=data.sigma,
+                         n_iter=iters)
+    costs_ref = np.asarray(costs_ref)
+
+    drivers = {}
+    drivers["pre_pr"] = IterativeDriver(
+        make_pre_step_fn(cfg), _pre_bundle(data, cfg, tau, sig),
+        options=RunOptions(max_iter=iters, tol=0, chunk=chunk,
+                           step_fn_light=make_pre_light_step_fn(cfg)))
+
+    def new_driver(**opts):
+        bundle, _ = build_bundle(data.Y, data.psfs, cfg,
+                                 sigma_noise=data.sigma)
+        return IterativeDriver(
+            make_step_fn(cfg), bundle,
+            options=RunOptions(max_iter=iters, tol=0, chunk=chunk,
+                               step_fn_light=make_light_step_fn(cfg),
+                               **opts))
+
+    drivers["paired"] = new_driver()
+    drivers["paired_costchunk"] = new_driver(
+        cost_every="chunk", step_fn_cost=make_cost_fn(cfg))
+
+    # warm-up round compiles every program and checks trajectory parity
+    for label, drv in drivers.items():
+        drv.bundle = drv.run()
+        costs = np.asarray(drv.log.costs)
+        if label == "paired_costchunk":
+            # per-chunk observability: the objective is only evaluated
+            # on chunk boundaries — compare there
+            np.testing.assert_allclose(costs[chunk - 1::chunk],
+                                       costs_ref[chunk - 1::chunk],
+                                       rtol=1e-4)
+        else:
+            np.testing.assert_allclose(costs, costs_ref, rtol=1e-4)
+
+    for drv in drivers.values():
+        drv.max_iter = ROUND_ITERS
+    samples = {label: [] for label in drivers}
+    for _ in range(rounds):
+        for label, drv in drivers.items():
+            samples[label].append(timed_round(drv, ROUND_ITERS))
+
+    results = {label: float(np.median(s)) for label, s in samples.items()}
+    base = results["pre_pr"]
+    records = []
+    for label in drivers:
+        us = results[label]
+        rec = {
+            "name": f"deconv/sparse_n{n}_chunk{chunk}_{label}",
+            "us_per_iter": round(us, 1),
+            "vs_pre_pr": round(us / base, 3),
+            "speedup": round(base / us, 3),
+            "traj_match": True,
+        }
+        records.append(rec)
+        print("BENCH " + json.dumps(rec), flush=True)
+        emit(f"deconv/sparse_n{n}_chunk{chunk}_{label}", us,
+             f"speedup={base / us:.3f}")
+    if not smoke:
+        # the acceptance gate: >= 1.3x per-iteration on the sparse path
+        assert base / results["paired"] >= 1.3, results
+    write_bench_json("BENCH_deconv.json", records)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

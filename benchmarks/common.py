@@ -40,3 +40,19 @@ def write_bench_json(path: str, records) -> None:
     with open(path, "w") as f:
         json.dump(records, f, indent=2)
     print(f"# wrote {path}", flush=True)
+
+
+# short timed rounds (one 32-iteration window each) let driver-level
+# benchmarks interleave their variants at fine grain against host-load
+# drift; 32 divides the warm-up lengths, so every compiled chunk
+# program is reused as-is
+ROUND_ITERS = 32
+
+
+def timed_round(driver, iters: int = ROUND_ITERS) -> float:
+    """One re-run of a warmed IterativeDriver; returns us/iteration.
+    The driver's bundle is rebound to the run's output so donated
+    buffers stay valid across rounds."""
+    n0 = len(driver.log.times)
+    driver.bundle = driver.run()
+    return float(np.sum(driver.log.times[n0:]) / iters * 1e6)

@@ -1,6 +1,6 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,lm,driver,api]
+    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,driver,api,deconv]
                                             [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
@@ -17,7 +17,7 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="psf,scdl,memory,lm,driver,api")
+    ap.add_argument("--only", default="psf,scdl,memory,driver,api,deconv")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     wanted = set(args.only.split(","))
@@ -33,9 +33,6 @@ def main() -> None:
     if "memory" in wanted:
         from benchmarks import bench_memory
         _run(bench_memory.run, "memory", failures)
-    if "lm" in wanted:
-        from benchmarks import bench_lm
-        _run(bench_lm.run, "lm", failures)
     if "driver" in wanted:
         from benchmarks import bench_driver
         _run(lambda: bench_driver.run(smoke=args.smoke), "driver",
@@ -43,6 +40,10 @@ def main() -> None:
     if "api" in wanted:
         from benchmarks import bench_api
         _run(lambda: bench_api.run(smoke=args.smoke), "api", failures)
+    if "deconv" in wanted:
+        from benchmarks import bench_deconv
+        _run(lambda: bench_deconv.run(smoke=args.smoke), "deconv",
+             failures)
     if failures:
         print(f"# FAILED tables: {failures}", file=sys.stderr)
         raise SystemExit(1)

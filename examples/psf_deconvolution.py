@@ -6,13 +6,22 @@ through the declarative ``solve()`` entry point (DESIGN.md §14), and
 reports recovery quality + convergence — the paper's Figs. 4/7 in
 miniature.
 
+The solver runs the optimized configuration by default (DESIGN.md §16):
+the paired-FFT convolution engine on the derived fast pad (81-grid for
+41-px stamps instead of the historical 96), the fused Condat
+elementwise kernels, chunked on-device iteration, and — for the sparse
+mode — ``cost_every="chunk"``: the scan body is objective-free and the
+cost is a weighted reduction of the carried starlet stack evaluated
+once per dispatched chunk, exactly the granularity at which convergence
+is checked anyway.  ``--per-iter-cost`` switches the observability grid
+back to every iteration.
+
     PYTHONPATH=src python examples/psf_deconvolution.py [--n 512]
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.problem import solve
 from repro.imaging import psf as psf_op
@@ -25,21 +34,38 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--chunk", type=int, default=12)
+    ap.add_argument("--per-iter-cost", action="store_true",
+                    help="evaluate the objective every iteration "
+                         "instead of once per chunk")
     args = ap.parse_args()
 
     data = psf_op.simulate(args.n, jax.random.PRNGKey(42))
     mse = lambda a, b: float(jnp.mean((a - b) ** 2))
-    print(f"simulated {args.n} stamps; observation MSE vs truth: "
+    print(f"simulated {args.n} stamps; FFT grid "
+          f"{psf_op.pad_for(data.Y.shape[-1])}^2 "
+          f"(seed hardcoded 96^2); observation MSE vs truth: "
           f"{mse(data.Y, data.X_true):.3e}")
 
     mesh = smallest_mesh()
     for mode in ("sparse", "lowrank"):
         cfg = SolverConfig(mode=mode, n_scales=4, lam=0.05, rank=16)
+        # the sparse objective off the carried starlet stack is pure
+        # reduction -> per-chunk observability is effectively free; the
+        # low-rank objective needs an SVD, so it stays on the skipping
+        # grid instead
+        cost_every = (1 if args.per_iter_cost
+                      else "chunk" if mode == "sparse" else args.chunk)
         sol = solve(DeconvolutionProblem(cfg, sigma_noise=data.sigma),
                     data.Y, data.psfs, mesh=mesh,
-                    max_iter=args.iters, tol=1e-5)
+                    max_iter=args.iters, tol=1e-5, chunk=args.chunk,
+                    cost_every=cost_every)
         log = sol.log
-        print(f"[{mode:7s}] cost {log.costs[0]:.3f} -> {log.costs[-1]:.3f} "
+        # per-chunk observability seeds the trace with +inf until the
+        # first evaluation — report from the first evaluated objective
+        c0 = next(c for c in log.costs if jnp.isfinite(c))
+        print(f"[{mode:7s}] cost_every={cost_every!r:8} "
+              f"cost {c0:.3f} -> {log.costs[-1]:.3f} "
               f"in {len(log.costs)} iters "
               f"({log.total_seconds:.1f}s, "
               f"converged_at={log.converged_at}); "

@@ -1,3 +1,2 @@
-from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, MoEConfig,  # noqa
-                                SSMConfig, ShapeConfig, all_configs,
-                                get_config, reduced, shape_applicable)
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig,  # noqa
+                                ShapeConfig)

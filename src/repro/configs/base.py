@@ -1,13 +1,11 @@
-"""Configuration system: model configs, input shapes, and the registry.
+"""Model-shape dataclasses kept for the sharding/data substrate.
 
-Every assigned architecture is a ``ModelConfig`` (frozen dataclass) registered
-under its public id (``--arch <id>``).  Shapes are ``ShapeConfig`` entries; the
-cross product (arch x shape) defines the dry-run cells.
+The LM architecture registry (10 arch modules, ``get_config``/``reduced``)
+was pruned with the rest of the LM surface (DESIGN.md §15);
+``parallel/sharding`` and ``data/`` still type against ``ModelConfig``.
 """
 from __future__ import annotations
 
-import dataclasses
-import importlib
 import math
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
@@ -190,92 +188,3 @@ class ShapeConfig:
     @property
     def tokens(self) -> int:
         return self.seq_len * self.global_batch
-
-
-SHAPES = {
-    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
-    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
-    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
-    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
-}
-
-
-def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
-    """Assignment rules: long_500k only for sub-quadratic archs."""
-    if shape.name == "long_500k":
-        return cfg.sub_quadratic
-    return True
-
-
-# --------------------------------------------------------------------------
-# Registry
-# --------------------------------------------------------------------------
-
-ARCH_IDS = (
-    "hymba-1.5b",
-    "falcon-mamba-7b",
-    "gemma3-27b",
-    "glm4-9b",
-    "qwen3-1.7b",
-    "granite-34b",
-    "granite-moe-3b-a800m",
-    "deepseek-moe-16b",
-    "internvl2-26b",
-    "musicgen-large",
-)
-
-_MODULE_FOR = {arch: "repro.configs." + arch.replace("-", "_").replace(".", "p")
-               for arch in ARCH_IDS}
-
-_REGISTRY: dict = {}
-
-
-def register(cfg: ModelConfig) -> ModelConfig:
-    _REGISTRY[cfg.name] = cfg
-    return cfg
-
-
-def get_config(arch: str) -> ModelConfig:
-    if arch not in _REGISTRY:
-        if arch not in _MODULE_FOR:
-            raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULE_FOR)}")
-        importlib.import_module(_MODULE_FOR[arch])
-    return _REGISTRY[arch]
-
-
-def all_configs() -> dict:
-    for arch in ARCH_IDS:
-        get_config(arch)
-    return dict(_REGISTRY)
-
-
-def reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 64,
-            vocab: int = 128, d_ff: int = 0, n_heads: int = 0,
-            n_kv_heads: int = 0) -> ModelConfig:
-    """Shrink a config to smoke-test scale, preserving its family traits."""
-    n_heads = n_heads or min(cfg.n_heads, 4) or cfg.n_heads
-    if cfg.n_heads:
-        n_heads = max(1, min(4, cfg.n_heads))
-        ratio = max(1, cfg.n_heads // max(cfg.n_kv_heads, 1))
-        n_kv_heads = n_kv_heads or max(1, n_heads // min(ratio, n_heads))
-    else:
-        n_heads, n_kv_heads = 0, 0
-    changes = dict(
-        n_layers=n_layers,
-        d_model=d_model,
-        n_heads=n_heads,
-        n_kv_heads=n_kv_heads,
-        d_ff=d_ff or d_model * 2,
-        vocab_size=vocab,
-        head_dim=(d_model // n_heads if n_heads else 0),
-        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else 0,
-        global_layers=tuple(g for g in cfg.global_layers if g < n_layers),
-    )
-    if cfg.moe.enabled:
-        changes["moe"] = dataclasses.replace(
-            cfg.moe, n_experts=min(cfg.moe.n_experts, 8),
-            top_k=min(cfg.moe.top_k, 2),
-            capacity_factor=2.0)
-    if cfg.ssm is not None:
-        changes["ssm"] = dataclasses.replace(cfg.ssm, chunk=8)
-    return dataclasses.replace(cfg, **changes)

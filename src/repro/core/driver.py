@@ -140,7 +140,11 @@ class IterativeDriver:
         self.straggler_factor = options.straggler_factor
         self.checkpoint_every = options.checkpoint_every
         self.checkpoint_fn = options.checkpoint_fn
-        self.chunk = max(int(options.chunk), 1)
+        # a chunk longer than the whole run would compile a scan program
+        # that only ever executes its shorter tail — clamp so the one
+        # program that runs is the one that was asked for
+        self.chunk = max(min(int(options.chunk),
+                             max(int(options.max_iter), 1)), 1)
         self._per_chunk = options.cost_every == "chunk"
         if self._per_chunk:
             # both halves of the per-chunk contract, or the driver would

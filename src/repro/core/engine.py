@@ -200,8 +200,12 @@ def make_scan_step(fn: Callable, bundle: Bundle, *, chunk: int = 8,
                 body, (data, rep, init), start + jnp.arange(chunk))
             return d, r, trace
 
+    # donate the carried-output buffer alongside the data blocks: the
+    # step returns an identically-shaped tree, so XLA aliases it
+    # in-place instead of allocating per dispatch
+    donated = ((0, 3) if use_light else (0,)) if donate else ()
     if bundle.mesh is None:
-        return jax.jit(chunk_fn, donate_argnums=(0,) if donate else ())
+        return jax.jit(chunk_fn, donate_argnums=donated)
 
     out_shape = out_struct(fn, bundle)
     data_spec = jax.tree.map(lambda _: bundle.record_spec(), bundle.data)
@@ -218,7 +222,7 @@ def make_scan_step(fn: Callable, bundle: Bundle, *, chunk: int = 8,
     mapped = shard_map(
         chunk_fn, mesh=bundle.mesh,
         in_specs=in_specs, out_specs=out_specs, check_vma=False)
-    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+    return jax.jit(mapped, donate_argnums=donated)
 
 
 def make_chunk_cost_step(fn_light: Callable, fn_cost: Callable,
@@ -270,8 +274,9 @@ def make_chunk_cost_step(fn_light: Callable, fn_cost: Callable,
                  jnp.asarray(f)[None]]), last, fresh)
         return d, r, fresh, trace
 
+    donated = (0, 3) if donate else ()
     if bundle.mesh is None:
-        return jax.jit(chunk_fn, donate_argnums=(0,) if donate else ())
+        return jax.jit(chunk_fn, donate_argnums=donated)
 
     cost_shape = jax.eval_shape(lambda d, r: fn_cost(d, r, ()),
                                 _local_shapes(bundle), bundle.replicated)
@@ -283,4 +288,4 @@ def make_chunk_cost_step(fn_light: Callable, fn_cost: Callable,
         in_specs=(data_spec, rep_spec, P(), cost_spec),
         out_specs=(data_spec, rep_spec, cost_spec, cost_spec),
         check_vma=False)
-    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+    return jax.jit(mapped, donate_argnums=donated)

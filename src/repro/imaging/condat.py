@@ -11,11 +11,16 @@ Bundle/Unbundle components keep the core algorithm intact.
 Condat (2013) iterations with f = data term, g = positivity indicator,
 h o L the regulariser (L = Phi for sparse, L = I for low-rank).
 
-Hot-path structure (DESIGN.md §12): Phi/Phi^T run through the batched
-starlet kernel over the whole stack; the PSF kernel FFTs are computed
-once (``psf.psf_fft``) and H(X) is carried across iterations in the
-solver state, so each iteration runs exactly one forward and one
-adjoint convolution.
+Hot-path structure (DESIGN.md §16): the PSF kernel spectra are computed
+once as the (kf, conj kf) pair on the derived fast pad
+(``psf.psf_fft_pair``) and H(X) is carried across iterations, so each
+iteration runs exactly one forward and one adjoint spectral multiply;
+Phi/Phi^T run through the batched starlet kernel, with Phi(X) carried
+so the over-relaxed dual input is the linear combination
+Phi(2 X_new - X) = 2 Phi(X_new) - Phi(X) — ONE starlet forward per
+iteration, shared between the dual clamp and the objective; the
+elementwise tails run through the fused ``kernels/condat_elwise``
+passes.
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ import jax.numpy as jnp
 from repro.imaging import lowrank as lr
 from repro.imaging import psf as psf_op
 from repro.imaging import starlet
+from repro.kernels.condat_elwise.ops import condat_dual, condat_primal
 from repro.kernels.starlet2d import ops as starlet_batch
 
 
@@ -47,7 +53,8 @@ class SolverConfig:
 class SolverState(NamedTuple):
     X: jax.Array                    # primal    (n, S, S)
     U: jax.Array                    # dual      (sparse: (J, n, S, S); lowrank: (n, S, S))
-    HX: jax.Array                   # carried H(X)  (n, S, S)
+    HX: jax.Array                   # carried H(X)        (n, S, S)
+    CX: jax.Array                   # carried Phi(X)      (J, n, S, S); () in lowrank
     cost: jax.Array                 # scalar
 
 
@@ -60,11 +67,11 @@ def grad_data(X, Y, psfs):
     return psf_op.Ht(psf_op.H(X, psfs) - Y, psfs)
 
 
-def grad_from_HX(HX, Y, psf_f):
+def grad_from_HX(HX, Y, kf_pair):
     """Same gradient with H(X) carried from the previous iteration and
-    the PSF kernel FFT precomputed: one inverse convolution instead of
-    two full ones."""
-    return psf_op.Ht_f(HX - Y, psf_f)
+    the conjugate PSF spectrum precomputed in the carried pair: one
+    rfft2 -> multiply -> irfft2, no kernel FFT, no conjugation."""
+    return psf_op.Ht_fp(HX - Y, kf_pair)
 
 
 def data_cost_from(HX, Y):
@@ -85,15 +92,13 @@ def weight_matrix(psfs, sigma: float, n_scales: int, k_sigma: float):
     return w[:, :, None, None]                                # (J, n, 1, 1)
 
 
-def sparse_dual_update(U, X_bar, W, sig, n_scales):
-    """prox of the conjugate of ||W o .||_1: clamp to [-W, W].
-
-    Phi runs through the batched starlet kernel: the whole (n, S, S)
-    stack is one (scale-major) transform instead of n per-stamp
-    roll-cascades under vmap.
-    """
-    V = U + sig * starlet_batch.forward(X_bar, n_scales)
-    return jnp.clip(V, -W, W)
+def sparse_dual_update(U, CX_new, CX, W, sig):
+    """prox of the conjugate of ||W o .||_1 at the over-relaxed point:
+    clamp U + sig Phi(X_bar) to [-W, W], with Phi(X_bar) formed as the
+    linear combination 2 CX_new - CX of the carried starlet stacks —
+    one fused elementwise pass (``kernels/condat_elwise``), no second
+    transform, no X_bar materialisation."""
+    return condat_dual(U, CX_new, CX, W, sig)
 
 
 def sparse_dual_adjoint(U, n_scales):
@@ -102,26 +107,32 @@ def sparse_dual_adjoint(U, n_scales):
 
 
 def primal_update(X, U_adj, grad, tau):
-    X_new = X - tau * grad - tau * U_adj
-    return jnp.maximum(X_new, 0.0)                 # prox of X >= 0
+    """Fused gradient step + positivity prox (one elementwise pass)."""
+    return condat_primal(X, U_adj, grad, tau)
 
 
 def data_cost(X, Y, psfs):
     return 0.5 * jnp.sum((Y - psf_op.H(X, psfs)) ** 2)
 
 
-def sparse_reg_cost(X, W, n_scales):
-    C = starlet_batch.forward(X, n_scales)          # (J, n, S, S)
-    return jnp.sum(jnp.abs(W * C))
+def sparse_reg_cost(CX, W):
+    """||W o Phi(X)||_1 off the carried coefficient stack — the starlet
+    forward already ran for the dual update, so the objective is a
+    weighted reduction, not a second transform."""
+    return jnp.sum(jnp.abs(W * CX))
 
 
 # ---------------------------------------------------------------------
 # Sequential solver (the github.com/sfarrens/psf counterpart)
 # ---------------------------------------------------------------------
 
-def step_sizes(Y, psfs, cfg: SolverConfig, sigma_noise: float):
-    """Condat step sizes from operator norms: 1/tau - sig*||L||^2 >= b/2."""
-    norm_H = psf_op.spectral_norm(psfs)
+def step_sizes(Y, psfs, cfg: SolverConfig, sigma_noise: float,
+               kf_pair=None):
+    """Condat step sizes from operator norms: 1/tau - sig*||L||^2 >= b/2.
+
+    ``kf_pair`` (``psf.psf_fft_pair``) is threaded into the spectral
+    power iteration so the PSF stack is FFT'd exactly once per solve."""
+    norm_H = psf_op.spectral_norm(psfs, kf_pair=kf_pair)
     if cfg.mode == "sparse":
         norm_L = starlet.spectral_norm(cfg.n_scales, Y.shape[-2:])
         W = weight_matrix(psfs, sigma_noise, cfg.n_scales, cfg.k_sigma)
@@ -136,21 +147,23 @@ def solve(Y, psfs, cfg: SolverConfig, sigma_noise: float = 0.02,
           n_iter: Optional[int] = None, cost_every: int = 1):
     """Run the solver; returns (X*, cost history (max_iter,)).
 
-    ``cost_every``: evaluate the objective (a full starlet forward + PSF
-    convolution in sparse mode, an SVD in low-rank mode) only every k-th
-    iteration; skipped entries of the history carry the last evaluated
-    value forward.
+    ``cost_every``: evaluate the objective (a weighted reduction of the
+    carried starlet stack in sparse mode, an SVD in low-rank mode) only
+    every k-th iteration; skipped entries of the history carry the last
+    evaluated value forward.
     """
     n_iter = n_iter or cfg.max_iter
     cost_every = max(int(cost_every), 1)
-    tau, sig, W = step_sizes(Y, psfs, cfg, sigma_noise)
-    psf_f = psf_op.psf_fft(psfs)
-    X0 = psf_op.Ht_f(Y, psf_f)
-    HX0 = psf_op.H_f(X0, psf_f)
+    kf_pair = psf_op.psf_fft_pair(psfs)
+    tau, sig, W = step_sizes(Y, psfs, cfg, sigma_noise, kf_pair=kf_pair)
+    X0 = psf_op.Ht_fp(Y, kf_pair)
+    HX0 = psf_op.H_fp(X0, kf_pair)
     if cfg.mode == "sparse":
         U0 = jnp.zeros((cfg.n_scales, Y.shape[0]) + Y.shape[1:])
+        CX0 = starlet_batch.forward(X0, cfg.n_scales)
     else:
         U0 = jnp.zeros_like(Y)
+        CX0 = jnp.zeros(())
 
     def step(state: SolverState, i):
         X, U = state.X, state.U
@@ -158,20 +171,24 @@ def solve(Y, psfs, cfg: SolverConfig, sigma_noise: float = 0.02,
             U_adj = sparse_dual_adjoint(U, cfg.n_scales)
         else:
             U_adj = U
-        grad = grad_from_HX(state.HX, Y, psf_f)
-        X_new = primal_update(X, U_adj, grad, tau)
-        X_bar = 2 * X_new - X
-        HX_new = psf_op.H_f(X_new, psf_f)
+        grad = grad_from_HX(state.HX, Y, kf_pair)
         if cfg.mode == "sparse":
-            U_new = sparse_dual_update(U, X_bar, W, sig, cfg.n_scales)
+            X_new = primal_update(X, U_adj, grad, tau)
+            CX_new = starlet_batch.forward(X_new, cfg.n_scales)
+            U_new = sparse_dual_update(U, CX_new, state.CX, W, sig)
+            HX_new = psf_op.H_fp(X_new, kf_pair)
 
             def eval_cost():
                 return data_cost_from(HX_new, Y) + \
-                    sparse_reg_cost(X_new, W, cfg.n_scales)
+                    sparse_reg_cost(CX_new, W)
         else:
+            X_new, X_bar = condat_primal(X, U_adj, grad, tau,
+                                         with_xbar=True)
+            CX_new = state.CX
             V = U + sig * X_bar
             flat = (V / sig).reshape(V.shape[0], -1)
             U_new = V - sig * lr.svt(flat, cfg.lam / sig).reshape(V.shape)
+            HX_new = psf_op.H_fp(X_new, kf_pair)
 
             def eval_cost():
                 s = jnp.linalg.svd(X_new.reshape(X_new.shape[0], -1),
@@ -182,9 +199,11 @@ def solve(Y, psfs, cfg: SolverConfig, sigma_noise: float = 0.02,
                                 lambda: state.cost)
         else:
             cost = eval_cost()
-        new = SolverState(X=X_new, U=U_new, HX=HX_new, cost=cost)
+        new = SolverState(X=X_new, U=U_new, HX=HX_new, CX=CX_new,
+                          cost=cost)
         return new, cost
 
-    init = SolverState(X=X0, U=U0, HX=HX0, cost=jnp.float32(jnp.inf))
+    init = SolverState(X=X0, U=U0, HX=HX0, CX=CX0,
+                       cost=jnp.float32(jnp.inf))
     final, costs = jax.lax.scan(step, init, jnp.arange(n_iter))
     return final.X, costs

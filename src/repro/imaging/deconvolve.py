@@ -41,28 +41,36 @@ from repro.imaging.condat import (SolverConfig, data_cost_from,
                                   grad_from_HX, primal_update,
                                   sparse_dual_adjoint, sparse_dual_update,
                                   sparse_reg_cost, step_sizes)
+from repro.kernels.condat_elwise.ops import condat_primal
+from repro.kernels.starlet2d import ops as starlet_batch
 
 
 def build_bundle(Y, psfs, cfg: SolverConfig, mesh=None,
                  sigma_noise: float = 0.02) -> Tuple[Bundle, dict]:
     """Steps 1-5: parallelise + zip the inputs into the bundled RDD.
 
-    Beyond the paper's five arrays, the bundle carries two derived
-    co-partitioned leaves that make each iteration cheaper: ``psf_f``
-    (the padded PSF kernel FFTs, constant across iterations) and ``HX``
-    (the forward model of the current primal, reused by the next
-    iteration's gradient so H runs once per iteration, not twice).
+    Beyond the paper's five arrays, the bundle carries three derived
+    co-partitioned leaves that make each iteration cheaper (DESIGN.md
+    §16): ``psf_fp`` (the (kf, conj kf) kernel-spectrum pair on the
+    derived fast pad, constant across iterations), ``HX`` (the forward
+    model of the current primal, reused by the next iteration's gradient
+    so H runs once per iteration, not twice) and — sparse mode — ``CX``
+    (the starlet stack Phi(X), so the over-relaxed dual input is the
+    linear combination 2 Phi(X_new) - Phi(X) and one transform per
+    iteration serves dual update and objective alike).
     """
-    tau, sig, W = step_sizes(Y, psfs, cfg, sigma_noise)
-    psf_f = psf_op.psf_fft(psfs)
-    X0 = psf_op.Ht_f(Y, psf_f)
-    data = {"Y": Y, "psf": psfs, "psf_f": psf_f, "Xp": X0,
-            "HX": psf_op.H_f(X0, psf_f)}
+    kf_pair = psf_op.psf_fft_pair(psfs)
+    tau, sig, W = step_sizes(Y, psfs, cfg, sigma_noise, kf_pair=kf_pair)
+    X0 = psf_op.Ht_fp(Y, kf_pair)
+    data = {"Y": Y, "psf_fp": kf_pair, "Xp": X0,
+            "HX": psf_op.H_fp(X0, kf_pair)}
     if cfg.mode == "sparse":
         # step 3: the weighting blocks are a *map over the PSF blocks*;
         # stored record-major (n, J, 1, 1) so they co-partition with Y.
         data["W"] = jnp.swapaxes(W, 0, 1)
         data["Xd"] = jnp.zeros((Y.shape[0], cfg.n_scales) + Y.shape[1:])
+        data["CX"] = jnp.swapaxes(
+            starlet_batch.forward(X0, cfg.n_scales), 0, 1)
     else:
         data["Xd"] = jnp.zeros_like(Y)
     replicated = {"tau": jnp.float32(tau), "sig": jnp.float32(sig)}
@@ -74,31 +82,35 @@ def build_bundle(Y, psfs, cfg: SolverConfig, mesh=None,
 
 
 def _sparse_update(d, rep, cfg: SolverConfig):
-    """Steps 7-8 (sparse): primal + dual updates, no cost."""
+    """Steps 7-8 (sparse): primal + dual updates, no cost.  Returns the
+    new data blocks plus the scale-major (W, CX_new) the objective
+    reuses — the iteration's single starlet forward serves both."""
     U = jnp.swapaxes(d["Xd"], 0, 1)               # (J, n_loc, S, S)
     W = jnp.swapaxes(d["W"], 0, 1)
+    CX = jnp.swapaxes(d["CX"], 0, 1)
     U_adj = sparse_dual_adjoint(U, cfg.n_scales)
-    grad = grad_from_HX(d["HX"], d["Y"], d["psf_f"])
+    grad = grad_from_HX(d["HX"], d["Y"], d["psf_fp"])
     X_new = primal_update(d["Xp"], U_adj, grad, rep["tau"])
-    X_bar = 2 * X_new - d["Xp"]
-    U_new = sparse_dual_update(U, X_bar, W, rep["sig"], cfg.n_scales)
+    CX_new = starlet_batch.forward(X_new, cfg.n_scales)
+    U_new = sparse_dual_update(U, CX_new, CX, W, rep["sig"])
     return dict(d, Xp=X_new, Xd=jnp.swapaxes(U_new, 0, 1),
-                HX=psf_op.H_f(X_new, d["psf_f"])), W
+                CX=jnp.swapaxes(CX_new, 0, 1),
+                HX=psf_op.H_fp(X_new, d["psf_fp"])), (W, CX_new)
 
 
 def _lowrank_update(d, rep, axes, cfg: SolverConfig):
     """Steps 7-8 (low-rank): primal update + distributed randomized SVT."""
     U, sig = d["Xd"], rep["sig"]
-    grad = grad_from_HX(d["HX"], d["Y"], d["psf_f"])
-    X_new = primal_update(d["Xp"], U, grad, rep["tau"])
-    X_bar = 2 * X_new - d["Xp"]
+    grad = grad_from_HX(d["HX"], d["Y"], d["psf_fp"])
+    X_new, X_bar = condat_primal(d["Xp"], U, grad, rep["tau"],
+                                 with_xbar=True)
     V = U + sig * X_bar
     flat = (V / sig).reshape(V.shape[0], -1)
     svt_flat = lr.randomized_svt_local(
         flat, rep["omega"], cfg.lam / sig, axes=axes or None)
     U_new = V - sig * svt_flat.reshape(V.shape)
     return dict(d, Xp=X_new, Xd=U_new,
-                HX=psf_op.H_f(X_new, d["psf_f"]))
+                HX=psf_op.H_fp(X_new, d["psf_fp"]))
 
 
 def make_step_fn(cfg: SolverConfig):
@@ -107,9 +119,9 @@ def make_step_fn(cfg: SolverConfig):
 
     def step(d, rep, axes):
         if cfg.mode == "sparse":
-            d_new, W = _sparse_update(d, rep, cfg)
+            d_new, (W, CX_new) = _sparse_update(d, rep, cfg)
             cost_part = data_cost_from(d_new["HX"], d["Y"]) + \
-                sparse_reg_cost(d_new["Xp"], W, cfg.n_scales)
+                sparse_reg_cost(CX_new, W)
             if axes:
                 cost_part = jax.lax.psum(cost_part, axes)
             return d_new, {"cost": cost_part}
@@ -150,8 +162,10 @@ def make_cost_fn(cfg: SolverConfig):
     def cost(d, rep, axes):
         data_part = data_cost_from(d["HX"], d["Y"])
         if cfg.mode == "sparse":
-            W = jnp.swapaxes(d["W"], 0, 1)
-            reg = sparse_reg_cost(d["Xp"], W, cfg.n_scales)
+            # the carried CX IS Phi(Xp): the per-chunk objective is a
+            # weighted reduction with no transform at all
+            reg = sparse_reg_cost(jnp.swapaxes(d["CX"], 0, 1),
+                                  jnp.swapaxes(d["W"], 0, 1))
             total = data_part + reg
             if axes:
                 total = jax.lax.psum(total, axes)

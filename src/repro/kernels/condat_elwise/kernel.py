@@ -1,0 +1,111 @@
+"""Fused Condat primal/dual elementwise tails — Pallas TPU kernels.
+
+Two grid passes per iteration (the starlet forward between them is a
+hard data dependency — see ``ref.py``):
+
+- ``condat_primal_fwd``: one (block_n, S, S) tile of X, Phi^T U and the
+  gradient streams through VMEM and writes the fresh primal (and, for
+  the low-rank path, the over-relaxed X_bar from the same read) — one
+  read of each operand, one write per output, vs the seed's ~3
+  separately-rooted elementwise fusions.
+- ``condat_dual_fwd``: one (block_m, S, S) tile of the dual stack U and
+  the two starlet coefficient stacks, plus the matching (block_m, 1, 1)
+  noise-weight column, fused over-relaxation + clamp in a single pass
+  over the (J x n)-times-larger dual state.
+
+The step sizes tau/sig are *traced* scalars (they live in the bundle's
+replicated state), so they enter through SMEM rather than being baked
+into the kernel body like ``admm_elwise``'s static ADMM constants.
+
+Grids are 1-D over the flattened leading (record/scale) axis,
+embarrassingly parallel; non-dividing leading sizes zero-pad up to a
+whole block (pad rows produce pad rows; the caller slices them off).
+VMEM per program at block 128, S = 41: ~5 x 128 x 41 x 41 x 4 B ~ 4 MB.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import auto_interpret, pad_leading
+
+
+def _primal_kernel(tau_ref, x_ref, ua_ref, g_ref, xn_ref):
+    t = tau_ref[0]
+    x = x_ref[...].astype(jnp.float32)
+    xn = jnp.maximum(x - t * g_ref[...].astype(jnp.float32)
+                     - t * ua_ref[...].astype(jnp.float32), 0.0)
+    xn_ref[...] = xn.astype(xn_ref.dtype)
+
+
+def _primal_xbar_kernel(tau_ref, x_ref, ua_ref, g_ref, xn_ref, xb_ref):
+    t = tau_ref[0]
+    x = x_ref[...].astype(jnp.float32)
+    xn = jnp.maximum(x - t * g_ref[...].astype(jnp.float32)
+                     - t * ua_ref[...].astype(jnp.float32), 0.0)
+    xn_ref[...] = xn.astype(xn_ref.dtype)
+    xb_ref[...] = (2.0 * xn - x).astype(xb_ref.dtype)
+
+
+def _dual_kernel(sig_ref, u_ref, cn_ref, co_ref, w_ref, out_ref):
+    s = sig_ref[0]
+    v = u_ref[...].astype(jnp.float32) + \
+        s * (2.0 * cn_ref[...].astype(jnp.float32)
+             - co_ref[...].astype(jnp.float32))
+    w = w_ref[...].astype(jnp.float32)                # (bm, 1, 1)
+    out_ref[...] = jnp.clip(v, -w, w).astype(out_ref.dtype)
+
+
+def _scalar_spec():
+    return pl.BlockSpec(memory_space=pltpu.SMEM)
+
+
+def condat_primal_fwd(X, U_adj, grad, tau, *, with_xbar: bool = False,
+                      block_n: int = 128, interpret=None):
+    """X/U_adj/grad: (N, S, S); tau scalar.  Returns X_new (and X_bar)."""
+    if interpret is None:
+        interpret = auto_interpret()
+    n, s = X.shape[0], X.shape[-1]
+    block_n = min(block_n, n)
+    ins, n_full = pad_leading([X, U_adj, grad], block_n)
+    tau = jnp.asarray(tau, jnp.float32).reshape((1,))
+
+    blk = pl.BlockSpec((block_n, s, s), lambda i: (i, 0, 0))
+    shape = jax.ShapeDtypeStruct((n_full, s, s), X.dtype)
+    kernel = _primal_xbar_kernel if with_xbar else _primal_kernel
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_full // block_n,),
+        in_specs=[_scalar_spec(), blk, blk, blk],
+        out_specs=[blk, blk] if with_xbar else blk,
+        out_shape=[shape, shape] if with_xbar else shape,
+        interpret=interpret,
+    )(tau, *ins)
+    if with_xbar:
+        return out[0][:n], out[1][:n]
+    return out[:n]
+
+
+def condat_dual_fwd(U, C_new, C_old, W, sig, *, block_m: int = 128,
+                    interpret=None):
+    """U/C_new/C_old: (M, S, S); W: (M, 1, 1); sig scalar."""
+    if interpret is None:
+        interpret = auto_interpret()
+    m, s = U.shape[0], U.shape[-1]
+    block_m = min(block_m, m)
+    ins, m_full = pad_leading([U, C_new, C_old, W], block_m)
+    sig = jnp.asarray(sig, jnp.float32).reshape((1,))
+
+    blk = pl.BlockSpec((block_m, s, s), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        _dual_kernel,
+        grid=(m_full // block_m,),
+        in_specs=[_scalar_spec(), blk, blk, blk,
+                  pl.BlockSpec((block_m, 1, 1), lambda i: (i, 0, 0))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((m_full, s, s), U.dtype),
+        interpret=interpret,
+    )(sig, *ins)
+    return out[:m]

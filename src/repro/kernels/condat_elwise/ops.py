@@ -1,0 +1,61 @@
+"""Jitted public wrappers for the fused Condat elementwise tails.
+
+``use_kernel=None`` auto-selects: the Pallas kernel where it compiles to
+Mosaic (TPU), the pure-jnp oracle elsewhere — on CPU/GPU hosts the
+oracle already collapses to one fused XLA loop per pass, and the
+interpreter would only add overhead inside the solver scan.  Tests pass
+``use_kernel=True`` to exercise the kernel in interpreter mode on any
+backend.
+
+Both wrappers accept arbitrary leading batch shape: ``condat_dual``
+flattens the (scale, record) leading axes of the dual stack into the
+kernel's 1-D grid axis (the weight column broadcasts per leading index,
+shaped (..., 1, 1) like ``condat.weight_matrix`` emits).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.condat_elwise.kernel import (auto_interpret,
+                                                condat_dual_fwd,
+                                                condat_primal_fwd)
+from repro.kernels.condat_elwise.ref import (condat_dual_ref,
+                                             condat_primal_ref)
+
+
+@partial(jax.jit, static_argnames=("with_xbar", "use_kernel", "block_n",
+                                   "interpret"))
+def condat_primal(X, U_adj, grad, tau, *, with_xbar: bool = False,
+                  use_kernel=None, block_n: int = 128, interpret=None):
+    if use_kernel is None:
+        use_kernel = not auto_interpret()
+    if not use_kernel:
+        return condat_primal_ref(X, U_adj, grad, tau, with_xbar=with_xbar)
+    lead = X.shape[:-2]
+    flat = (-1,) + X.shape[-2:]
+    out = condat_primal_fwd(X.reshape(flat), U_adj.reshape(flat),
+                            grad.reshape(flat), tau, with_xbar=with_xbar,
+                            block_n=block_n, interpret=interpret)
+    if with_xbar:
+        return (out[0].reshape(lead + X.shape[-2:]),
+                out[1].reshape(lead + X.shape[-2:]))
+    return out.reshape(lead + X.shape[-2:])
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_m", "interpret"))
+def condat_dual(U, C_new, C_old, W, sig, *, use_kernel=None,
+                block_m: int = 128, interpret=None):
+    if use_kernel is None:
+        use_kernel = not auto_interpret()
+    if not use_kernel:
+        return condat_dual_ref(U, C_new, C_old, W, sig)
+    lead = U.shape[:-2]
+    flat = (-1,) + U.shape[-2:]
+    w = jnp.broadcast_to(W, lead + (1, 1)).reshape((-1, 1, 1))
+    out = condat_dual_fwd(U.reshape(flat), C_new.reshape(flat),
+                          C_old.reshape(flat), w, sig,
+                          block_m=block_m, interpret=interpret)
+    return out.reshape(U.shape)

@@ -1,0 +1,44 @@
+"""Oracle for the fused Condat elementwise tails (Algorithm 1's
+primal-dual iteration, DESIGN.md §16).
+
+The iteration's elementwise work forms two islands separated by the
+starlet transform (the dual clamp consumes Phi of the fresh primal, so
+no single pass can span both):
+
+  primal:  X_new = max(X - tau grad - tau Phi^T U, 0)        [prox of >=0]
+  dual:    U_new = clip(U + sig (2 C_new - C_old), -W, W)
+
+The dual form folds the over-relaxation through the linear transform:
+Phi(2 X_new - X) = 2 Phi(X_new) - Phi(X), with C = Phi(X) carried
+across iterations — so X_bar is never materialised on the sparse path
+and the iteration runs ONE starlet forward (the seed ran two: one on
+X_bar for the dual, one on X_new for the objective; the carried C_new
+now serves both).  ``with_xbar=True`` (the low-rank path, whose dual
+prox is an SVT over the stack, L = I) additionally emits
+X_bar = 2 X_new - X from the same read of X.
+
+Accumulation in fp32, results cast back to the input dtype (the kernel
+contract, matching ``admm_elwise``)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def condat_primal_ref(X, U_adj, grad, tau, *, with_xbar: bool = False):
+    dt = X.dtype
+    x = X.astype(jnp.float32)
+    t = jnp.float32(tau)
+    xn = jnp.maximum(x - t * grad.astype(jnp.float32)
+                     - t * U_adj.astype(jnp.float32), 0.0)
+    if with_xbar:
+        return xn.astype(dt), (2.0 * xn - x).astype(dt)
+    return xn.astype(dt)
+
+
+def condat_dual_ref(U, C_new, C_old, W, sig):
+    dt = U.dtype
+    s = jnp.float32(sig)
+    v = U.astype(jnp.float32) + s * (2.0 * C_new.astype(jnp.float32)
+                                     - C_old.astype(jnp.float32))
+    w = W.astype(jnp.float32)
+    return jnp.clip(v, -w, w).astype(dt)

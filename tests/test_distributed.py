@@ -10,8 +10,6 @@ import sys
 import textwrap
 from pathlib import Path
 
-import pytest
-
 REPO = Path(__file__).resolve().parent.parent
 
 
@@ -106,58 +104,6 @@ def test_scdl_distributed_equals_sequential():
     """)
 
 
-def test_moe_shard_map_equals_local():
-    run_sub("""
-    from repro.configs import get_config, reduced
-    from repro.models import model as M
-    from repro.parallel.sharding import MeshRules
-    mesh = make_mesh((2, 4), ("data", "model"))
-    cfg = reduced(get_config("deepseek-moe-16b"))
-    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16),
-                                          0, cfg.vocab_size),
-             "labels": jnp.zeros((4, 16), jnp.int32)}
-    l_loc, _ = M.loss_fn(params, batch, cfg, MeshRules(mesh=None),
-                         remat=False, q_chunk=0)
-    with mesh:
-        l_dist, _ = jax.jit(lambda p, b: M.loss_fn(
-            p, b, cfg, MeshRules(mesh=mesh), remat=False, q_chunk=0))(
-            params, batch)
-    np.testing.assert_allclose(float(l_loc), float(l_dist), rtol=2e-4)
-    print("moe ok")
-    """)
-
-
-def test_sharded_train_step_matches_single_device():
-    run_sub("""
-    from repro.configs import get_config, reduced
-    from repro.models import model as M
-    from repro.optim import adamw as A
-    from repro.parallel.sharding import MeshRules
-    from repro.training import steps as S
-    mesh = make_mesh((4, 2), ("data", "model"))
-    cfg = reduced(get_config("qwen3-1.7b"))
-    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-    opt = A.adamw_init(params)
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16),
-                                          0, cfg.vocab_size),
-             "labels": jnp.zeros((8, 16), jnp.int32)}
-    s_loc = jax.jit(S.build_train_step(cfg, MeshRules(mesh=None),
-                                       remat=True, q_chunk=0))
-    p1, o1, m1 = s_loc(params, opt, batch)
-    with mesh:
-        s_dist = jax.jit(S.build_train_step(cfg, MeshRules(mesh=mesh),
-                                            remat=True, q_chunk=0))
-        p2, o2, m2 = s_dist(params, opt, batch)
-    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
-                               rtol=1e-4)
-    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=5e-3, atol=5e-4)
-    print("sharded train ok")
-    """)
-
-
 def test_hierarchical_psum_and_compression():
     run_sub("""
     from functools import partial
@@ -220,37 +166,6 @@ def test_pipeline_parallel_matches_sequential():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
     print("pipeline ok")
-    """)
-
-
-def test_dp_only_remap_matches_single_device():
-    """The §Perf/D small-model mapping (batch over every axis, params
-    replicated, FSDP opt state) computes the identical loss."""
-    run_sub("""
-    from repro.configs import get_config, reduced
-    from repro.models import model as M
-    from repro.optim import adamw as A
-    from repro.parallel.sharding import MeshRules
-    from repro.training import steps as S
-    mesh = make_mesh((4, 2), ("data", "model"))
-    for arch in ("hymba-1.5b", "granite-moe-3b-a800m"):
-        cfg = reduced(get_config(arch))
-        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-        opt = A.adamw_init(params)
-        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
-                                              (8, 16), 0, cfg.vocab_size),
-                 "labels": jnp.zeros((8, 16), jnp.int32)}
-        s1 = jax.jit(S.build_train_step(cfg, MeshRules(mesh=None),
-                                        remat=True, q_chunk=0))
-        _, _, m1 = s1(params, opt, batch)
-        with mesh:
-            rules = MeshRules(mesh=mesh, dp_only=True, fsdp=True)
-            s2 = jax.jit(S.build_train_step(cfg, rules, remat=True,
-                                            q_chunk=0))
-            _, _, m2 = s2(params, opt, batch)
-        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
-                                   rtol=2e-4)
-    print("dp_only ok")
     """)
 
 

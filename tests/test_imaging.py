@@ -63,6 +63,89 @@ def test_psf_convolve_matches_direct():
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
 
 
+# ------------------------------------------------- paired-FFT engine
+def test_fast_pad_rule():
+    """Derived grid: smallest 5-smooth size >= 2S - 1 (DESIGN.md §16)."""
+    assert psf_op.fast_size(81) == 81          # 3^4
+    assert psf_op.fast_size(82) == 90          # 2 * 3^2 * 5
+    assert psf_op.pad_for(41) == 81            # the seed hardcoded 96
+    assert psf_op.pad_for(64) == 128
+    assert psf_op.pad_for(21) == 45
+    for s in (9, 21, 33, 41, 57, 64):
+        pad = psf_op.pad_for(s)
+        assert pad >= 2 * s - 1
+        assert psf_op.grid_of(psf_op.psf_fft_pair(
+            jnp.ones((2, s, s)))) == pad
+
+
+@pytest.mark.parametrize("stamp", [21, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv_pair_adjoint_property(stamp, dtype):
+    """<H(x), y> == <x, Ht(y)> through conv_pair_f's two halves, at
+    non-default stamp sizes on the derived pad, fp32 and bf16."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(stamp), 3)
+    x = jax.random.normal(k1, (3, stamp, stamp), dtype)
+    y = jax.random.normal(k2, (3, stamp, stamp), dtype)
+    psfs = jax.random.normal(k3, (3, stamp, stamp), dtype)
+    kf_pair = psf_op.psf_fft_pair(psfs)
+    Hx, Hty = psf_op.conv_pair_f(x, y, kf_pair)
+    lhs = float(jnp.sum(Hx.astype(jnp.float32) * y.astype(jnp.float32)))
+    rhs = float(jnp.sum(x.astype(jnp.float32) * Hty.astype(jnp.float32)))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert abs(lhs - rhs) <= tol * max(abs(lhs), 1.0)
+
+
+@pytest.mark.parametrize("stamp", [21, 41, 64])
+def test_conv_pair_matches_single_calls(stamp):
+    """The batched pair == separate H_f / Ht_f calls == the one-shot
+    convolve API (kernel FFT recomputed per call)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(stamp + 1), 3)
+    x = jax.random.normal(k1, (4, stamp, stamp))
+    y = jax.random.normal(k2, (4, stamp, stamp))
+    psfs = jax.random.normal(k3, (4, stamp, stamp))
+    kf_pair = psf_op.psf_fft_pair(psfs)
+    Hx, Hty = psf_op.conv_pair_f(x, y, kf_pair)
+    np.testing.assert_allclose(np.asarray(Hx),
+                               np.asarray(psf_op.H_fp(x, kf_pair)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Hty),
+                               np.asarray(psf_op.Ht_fp(y, kf_pair)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Hx),
+                               np.asarray(psf_op.H(x, psfs)),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Hty),
+                               np.asarray(psf_op.Ht(y, psfs)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_derived_pad_matches_oversized_grid():
+    """The fast pad (81 for S = 41) computes the identical 'same'
+    convolution as a generously padded grid — the crop window is
+    alias-free at 2S - 1 (DESIGN.md §16)."""
+    data = psf_op.simulate(4, jax.random.PRNGKey(5))
+    for pad in (96, 128):
+        kf = psf_op.psf_fft(data.psfs, pad=pad)
+        np.testing.assert_allclose(
+            np.asarray(psf_op.H(data.X_true, data.psfs)),
+            np.asarray(psf_op.H_f(data.X_true, kf)),
+            rtol=1e-4, atol=1e-6)
+
+
+def test_sparse_dual_overrelax_linearity():
+    """Phi(2 X_new - X) == 2 Phi(X_new) - Phi(X): the identity that
+    lets the solver carry Phi(X) and run one starlet forward per
+    iteration (DESIGN.md §16)."""
+    from repro.kernels.starlet2d import ops as starlet_batch
+    k1, k2 = jax.random.split(KEY)
+    X = jax.random.normal(k1, (6, 41, 41))
+    Xn = jax.random.normal(k2, (6, 41, 41))
+    direct = starlet_batch.forward(2 * Xn - X, 3)
+    linear = 2 * starlet_batch.forward(Xn, 3) - starlet_batch.forward(X, 3)
+    np.testing.assert_allclose(np.asarray(linear), np.asarray(direct),
+                               rtol=1e-4, atol=1e-5)
+
+
 # -------------------------------------------------- Algorithm 1 (PSF)
 @pytest.fixture(scope="module")
 def psf_data():

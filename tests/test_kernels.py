@@ -13,99 +13,6 @@ def _tol(dtype):
         dict(rtol=2e-5, atol=2e-5)
 
 
-# ---------------------------------------------------------------- flash
-from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
-
-FA_CASES = [
-    # B, H, K, S, T, D, causal, window
-    (2, 4, 2, 256, 256, 64, True, 0),
-    (1, 4, 4, 128, 128, 128, True, 0),
-    (2, 8, 2, 256, 256, 64, True, 64),
-    (1, 2, 1, 128, 256, 64, True, 0),
-    (1, 2, 2, 256, 256, 32, False, 0),
-]
-
-
-@pytest.mark.parametrize("case", FA_CASES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_flash_attention(case, dtype):
-    B, H, K, S, T, D, causal, win = case
-    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, S, D), dtype)
-    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, K, T, D), dtype)
-    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, K, T, D), dtype)
-    out = flash_attention(q, k, v, causal=causal, window=win)
-    ref = attention_ref(q, k, v, causal=causal, window=win)
-    np.testing.assert_allclose(np.asarray(out, np.float32),
-                               np.asarray(ref, np.float32), **_tol(dtype))
-
-
-# --------------------------------------------------------------- decode
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
-
-DEC_CASES = [
-    (2, 8, 2, 1024, 64, 0),
-    (1, 4, 1, 512, 128, 0),
-    (2, 4, 4, 1024, 64, 128),
-    (3, 6, 2, 512, 32, 0),
-]
-
-
-@pytest.mark.parametrize("case", DEC_CASES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_decode_attention(case, dtype):
-    B, H, K, T, D, win = case
-    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, D), dtype)
-    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, K, T, D), dtype)
-    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, K, T, D), dtype)
-    lengths = (jnp.arange(B) * (T // (2 * B)) + T // 2).astype(jnp.int32)
-    out = decode_attention(q, k, v, lengths, window=win)
-    ref = decode_attention_ref(q, k, v, lengths, window=win)
-    np.testing.assert_allclose(np.asarray(out, np.float32),
-                               np.asarray(ref, np.float32), **_tol(dtype))
-
-
-# ----------------------------------------------------------------- scan
-from repro.kernels.selective_scan.ops import selective_scan
-from repro.kernels.selective_scan.ref import selective_scan_ref
-
-SCAN_CASES = [(2, 128, 256, 16), (1, 64, 512, 8), (4, 256, 256, 4)]
-
-
-@pytest.mark.parametrize("case", SCAN_CASES)
-def test_selective_scan(case):
-    B, L, dI, dS = case
-    a = jax.random.uniform(jax.random.fold_in(KEY, 4), (B, L, dI, dS),
-                           minval=0.5, maxval=0.99)
-    b = jax.random.normal(jax.random.fold_in(KEY, 5), (B, L, dI, dS)) * .1
-    C = jax.random.normal(jax.random.fold_in(KEY, 6), (B, L, dS))
-    h0 = jax.random.normal(jax.random.fold_in(KEY, 7), (B, dI, dS))
-    y, h = selective_scan(a, b, C, h0)
-    yr, hr = selective_scan_ref(a, b, C, h0)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
-                               rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
-                               rtol=2e-4, atol=2e-4)
-
-
-def test_selective_scan_matches_model_mixer():
-    """The kernel implements the same recurrence as models.mamba."""
-    from repro.models.mamba import _chunk_scan
-    B, L, dI, dS = 2, 64, 128, 16
-    a = jax.random.uniform(jax.random.fold_in(KEY, 8), (B, L, dI, dS),
-                           minval=0.5, maxval=0.99)
-    b = jax.random.normal(jax.random.fold_in(KEY, 9), (B, L, dI, dS)) * .1
-    C = jax.random.normal(jax.random.fold_in(KEY, 10), (B, L, dS))
-    h0 = jnp.zeros((B, dI, dS))
-    y_m, h_m = _chunk_scan(a, b, C, h0, chunk=16)
-    y_k, h_k = selective_scan(a, b, C, h0)
-    np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_k),
-                               rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(np.asarray(h_m), np.asarray(h_k),
-                               rtol=2e-4, atol=2e-4)
-
-
 # -------------------------------------------------------------- starlet
 from repro.kernels.starlet2d.ops import decompose as k_decompose
 from repro.kernels.starlet2d.ops import smooth as k_smooth
@@ -257,5 +164,70 @@ def test_admm_elwise_matches_unfused_formulation():
     Z2 = c2 * Q + Y2 + Y3
     expect = jnp.stack([Y1, Y2, Y3, Z1, Z2], axis=1)
     got = admm_elwise_ref(Wh, Wl, YZ, **AE_KW)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------- condat elwise
+from repro.kernels.condat_elwise.ops import condat_dual, condat_primal
+from repro.kernels.condat_elwise.ref import (condat_dual_ref,
+                                             condat_primal_ref)
+
+# (100, ...) / (130, ...) exercise the non-block-aligned zero-pad
+CP_CASES = [(100, 41), (130, 21), (16, 41), (256, 33)]
+
+
+@pytest.mark.parametrize("case", CP_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_condat_primal(case, dtype):
+    """Fused gradient step + positivity prox (+ over-relaxation for the
+    low-rank path), kernel vs oracle, non-block-aligned stacks."""
+    N, S = case
+    X = jax.random.normal(jax.random.fold_in(KEY, 30), (N, S, S), dtype)
+    Ua = jax.random.normal(jax.random.fold_in(KEY, 31), (N, S, S), dtype)
+    g = jax.random.normal(jax.random.fold_in(KEY, 32), (N, S, S), dtype)
+    out = condat_primal(X, Ua, g, 0.31, use_kernel=True, interpret=True)
+    ref = condat_primal_ref(X, Ua, g, 0.31)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    xn, xb = condat_primal(X, Ua, g, 0.31, with_xbar=True,
+                           use_kernel=True, interpret=True)
+    rn, rb = condat_primal_ref(X, Ua, g, 0.31, with_xbar=True)
+    np.testing.assert_allclose(np.asarray(xn, np.float32),
+                               np.asarray(rn, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(xb, np.float32),
+                               np.asarray(rb, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("case", [(3, 100, 41), (4, 37, 21), (2, 130, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_condat_dual(case, dtype):
+    """Fused over-relaxation + dual clamp over the (J, n, S, S) stack
+    with the (J, n, 1, 1) weight column broadcast, kernel vs oracle on
+    non-block-aligned flattened sizes."""
+    J, N, S = case
+    U = jax.random.normal(jax.random.fold_in(KEY, 33), (J, N, S, S), dtype)
+    Cn = jax.random.normal(jax.random.fold_in(KEY, 34), (J, N, S, S), dtype)
+    Co = jax.random.normal(jax.random.fold_in(KEY, 35), (J, N, S, S), dtype)
+    W = jax.random.uniform(jax.random.fold_in(KEY, 36), (J, N, 1, 1),
+                           jnp.float32).astype(dtype)
+    out = condat_dual(U, Cn, Co, W, 0.47, use_kernel=True, interpret=True)
+    ref = condat_dual_ref(U, Cn, Co, W, 0.47)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_condat_dual_matches_unfused_formulation():
+    """The fused pass equals the textbook dual step: V = U + sig
+    Phi(X_bar) with Phi(X_bar) = 2 C_new - C_old, then clamp to
+    [-W, W]."""
+    J, N, S = 3, 64, 41
+    sig = 0.8
+    U = jax.random.normal(jax.random.fold_in(KEY, 37), (J, N, S, S))
+    Cn = jax.random.normal(jax.random.fold_in(KEY, 38), (J, N, S, S))
+    Co = jax.random.normal(jax.random.fold_in(KEY, 39), (J, N, S, S))
+    W = jax.random.uniform(jax.random.fold_in(KEY, 40), (J, N, 1, 1))
+    got = condat_dual(U, Cn, Co, W, sig)
+    expect = jnp.clip(U + sig * (2 * Cn - Co), -W, W)
     np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
                                rtol=1e-5, atol=1e-6)
