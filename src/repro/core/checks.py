@@ -1,0 +1,149 @@
+"""Runtime contract sanitizers: ``solve(..., checks=True)``.
+
+The static pass (``repro.lint``) catches what never has to run; this
+module catches what only fails on real values.  Enabled per run via
+``RunOptions.checks`` / ``solve(..., checks=True)`` or globally via the
+``REPRO_CHECKS=1`` environment variable (the env var force-enables; it
+is read once per solve so CI can flip it per job).  When disabled —
+the default — the driver performs **zero** additional dispatches or
+host transfers (the ``bench_api`` solve-overhead gate runs with checks
+off and holds the ≤2% line).
+
+Three guard families (DESIGN.md §17):
+
+- **finite guards** — ``init_bundle`` output and the evolving
+  data/replicated state at every host sync must be NaN/Inf-free;
+- **carry-contract guards** — the compiled step's output pytree
+  structure, shapes and dtypes must match its input carry exactly,
+  asserted via ``jax.eval_shape`` *before the first dispatch* (a dtype
+  flip in the carry means every chunk silently recompiles — the
+  classic scan-carry bug);
+- **cost guards** — freshly evaluated objectives must be finite.
+  ``+inf`` is exempt: the engine seeds not-yet-evaluated cost slots
+  with ``+inf`` by convention (``engine.init_cost_like``), so only NaN
+  and ``-inf`` are hard failures.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_ENV_VAR = "REPRO_CHECKS"
+
+
+class CheckError(RuntimeError):
+    """A runtime contract sanitizer tripped (checks=True mode)."""
+
+
+def checks_enabled(flag: bool = False) -> bool:
+    """``flag`` OR the ``REPRO_CHECKS`` env var (force-enable)."""
+    import os
+    env = os.environ.get(_ENV_VAR, "").strip().lower()
+    return bool(flag) or env not in ("", "0", "false", "no")
+
+
+# --------------------------------------------------------------------
+# Finite guards
+# --------------------------------------------------------------------
+
+def _leaf_label(path) -> str:
+    return jax.tree_util.keystr(path) or "<root>"
+
+
+def assert_all_finite(tree: Any, what: str) -> None:
+    """Host-side NaN/Inf sweep over every float leaf of ``tree``.
+
+    Costs one device_get per leaf — only ever called in checks mode.
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        if not np.issubdtype(arr.dtype, np.floating) and \
+                not np.issubdtype(arr.dtype, np.complexfloating):
+            continue
+        bad = ~np.isfinite(arr)
+        if bad.any():
+            n = int(bad.sum())
+            kinds = []
+            if np.isnan(arr).any():
+                kinds.append("NaN")
+            if np.isposinf(arr).any():
+                kinds.append("+inf")
+            if np.isneginf(arr).any():
+                kinds.append("-inf")
+            raise CheckError(
+                f"checks=True: {what}: leaf '{_leaf_label(path)}' has "
+                f"{n}/{arr.size} non-finite values "
+                f"({'/'.join(kinds)}) — the run is poisoned; inspect "
+                f"the step math or lower the step sizes")
+
+
+def assert_costs_finite(costs: np.ndarray, what: str) -> None:
+    """NaN / ``-inf`` objectives are hard failures; ``+inf`` is the
+    engine's not-yet-evaluated seed and passes."""
+    costs = np.asarray(costs, dtype=np.float64)
+    bad = np.isnan(costs) | np.isneginf(costs)
+    if bad.any():
+        idx = int(np.argmax(bad))
+        raise CheckError(
+            f"checks=True: {what}: objective value is "
+            f"{costs.ravel()[idx]!r} at position {idx} of this sync — "
+            f"the iterate diverged (NaN/-inf cost)")
+
+
+# --------------------------------------------------------------------
+# Carry-contract guards (trace-time, zero dispatch)
+# --------------------------------------------------------------------
+
+def _spec_of(tree: Any):
+    """(treedef, [(shape, dtype)…]) — works for arrays *and* for the
+    ShapeDtypeStructs that ``jax.eval_shape`` returns."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return treedef, [(tuple(np.shape(x)), np.dtype(jax.numpy.result_type(x)))
+                     for x in leaves]
+
+
+def assert_carry_stable(fn, in_carry, out_carry_spec, what: str) -> None:
+    """Compare an input carry against the step's *abstract* output.
+
+    ``out_carry_spec`` is the matching slice of ``jax.eval_shape(fn,
+    ...)`` — metadata only, nothing was dispatched.  A structure
+    mismatch, shape drift, or dtype flip raises with the leaf path:
+    any of them would make ``lax.scan`` reject the carry or silently
+    recompile every chunk.
+    """
+    in_def, in_leaves = _spec_of(in_carry)
+    out_def, out_leaves = _spec_of(out_carry_spec)
+    if in_def != out_def:
+        raise CheckError(
+            f"checks=True: {what}: step output carry has a different "
+            f"pytree structure than its input —\n  in : {in_def}\n"
+            f"  out: {out_def}\nthe scan carry must be "
+            f"structure-stable")
+    paths = [_leaf_label(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(in_carry)[0]]
+    for label, (si, di), (so, do) in zip(paths, in_leaves, out_leaves):
+        if si != so:
+            raise CheckError(
+                f"checks=True: {what}: carry leaf '{label}' changes "
+                f"shape {si} -> {so} across one step")
+        if di != do:
+            raise CheckError(
+                f"checks=True: {what}: carry leaf '{label}' changes "
+                f"dtype {di} -> {do} across one step — every chunk "
+                f"would recompile and the objective silently runs in "
+                f"{do}")
+
+
+def eval_step_spec(fn, *args):
+    """``jax.eval_shape`` with the sanitizer's error framing."""
+    try:
+        return jax.eval_shape(fn, *args)
+    except CheckError:
+        raise
+    except Exception as e:
+        raise CheckError(
+            f"checks=True: step function failed to trace under "
+            f"eval_shape (before any dispatch): {e}") from e

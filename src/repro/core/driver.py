@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import checks as _checks
 from repro.core.bundle import Bundle
 from repro.core.engine import (init_cost_like, init_out_like,
                                make_chunk_cost_step, make_scan_step,
@@ -63,6 +64,10 @@ class RunOptions:
     straggler_factor: float = 3.0
     checkpoint_every: int = 0
     checkpoint_fn: Optional[Callable] = None
+    # runtime contract sanitizers (repro.core.checks; also force-enabled
+    # by REPRO_CHECKS=1 when going through solve()).  Off by default:
+    # the disabled path adds zero dispatches or host transfers.
+    checks: bool = False
     # step wiring
     step_fn_light: Optional[Callable] = None
     step_fn_cost: Optional[Callable] = None
@@ -140,6 +145,7 @@ class IterativeDriver:
         self.straggler_factor = options.straggler_factor
         self.checkpoint_every = options.checkpoint_every
         self.checkpoint_fn = options.checkpoint_fn
+        self.checks = options.checks
         # a chunk longer than the whole run would compile a scan program
         # that only ever executes its shorter tail — clamp so the one
         # program that runs is the one that was asked for
@@ -229,8 +235,44 @@ class IterativeDriver:
         prev, cur = c[-w - 1], c[-1]
         return abs(prev - cur) <= self.tol * max(abs(prev), 1e-12)
 
+    # ------------------------------------------------------ sanitizers
+    def _last_init(self):
+        """Initial value of the carried last-output slot (``None`` when
+        the mode carries no extra output between chunks)."""
+        return (init_cost_like(self.step_fn_cost, self.bundle)
+                if self._cost_per_chunk
+                else init_out_like(self.step_fn, self.bundle)
+                if self._skips_cost else None)
+
+    def _assert_contracts(self, start_iter: int) -> None:
+        """checks=True pre-flight (repro.core.checks): the initial
+        state is finite and the compiled step's carry is structure/
+        shape/dtype-stable — the latter via ``jax.eval_shape``, so
+        nothing is dispatched before the verdict."""
+        data, rep = self.bundle.data, self.bundle.replicated
+        _checks.assert_all_finite(
+            {"data": data, "replicated": rep}, "initial bundle state")
+        if self.chunk == 1:
+            spec = _checks.eval_step_spec(self.step, data, rep)
+            _checks.assert_carry_stable(
+                self.step, data, spec[0], "per-step data carry")
+            return
+        k = min(self.chunk, max(self.max_iter - start_iter, 1))
+        step = self._scan_step(k)
+        last = self._last_init()
+        if last is not None:
+            spec = _checks.eval_step_spec(step, data, rep,
+                                          np.int32(start_iter), last)
+        else:
+            spec = _checks.eval_step_spec(step, data, rep,
+                                          np.int32(start_iter))
+        _checks.assert_carry_stable(
+            step, (data, rep), (spec[0], spec[1]), "chunked scan carry")
+
     # ------------------------------------------------------------- run
     def run(self, start_iter: int = 0) -> Bundle:
+        if self.checks:
+            self._assert_contracts(start_iter)
         if self.chunk == 1:
             return self._run_per_step(start_iter)
         return self._run_chunked(start_iter)
@@ -252,10 +294,7 @@ class IterativeDriver:
 
     def _run_chunked(self, start_iter: int) -> Bundle:
         data, rep = self.bundle.data, self.bundle.replicated
-        last = (init_cost_like(self.step_fn_cost, self.bundle)
-                if self._cost_per_chunk
-                else init_out_like(self.step_fn, self.bundle)
-                if self._skips_cost else None)
+        last = self._last_init()
         ema = None
         compiled_ks = set()
         i = start_iter
@@ -274,6 +313,12 @@ class IterativeDriver:
             costs = np.asarray(jax.device_get(
                 jax.block_until_ready(costs)))
             dt = time.perf_counter() - t0
+            if self.checks:
+                _checks.assert_costs_finite(
+                    costs, f"chunk ending at iteration {i + k - 1}")
+                _checks.assert_all_finite(
+                    {"data": data, "replicated": rep},
+                    f"state after iteration {i + k - 1}")
             self.log.times.extend([dt / k] * k)
             self.log.costs.extend(float(c) for c in np.ravel(costs))
             # a chunk length's first dispatch includes XLA compilation
@@ -321,8 +366,13 @@ class IterativeDriver:
                 cost = cost.block_until_ready()
                 dt = time.perf_counter() - t0
                 self.log.times.append(dt)
-                self.log.costs.append(
-                    float(np.asarray(jax.device_get(cost))))
+                cost_val = float(np.asarray(jax.device_get(cost)))
+                if self.checks:
+                    _checks.assert_costs_finite(
+                        np.asarray([cost_val]), f"iteration {i}")
+                    _checks.assert_all_finite(
+                        {"data": data}, f"state after iteration {i}")
+                self.log.costs.append(cost_val)
                 if self.update_replicated is not None:
                     rep = self.update_replicated(rep, out)
             # straggler watchdog: a step far beyond the EMA is logged and

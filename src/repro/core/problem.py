@@ -35,7 +35,7 @@ from typing import (Any, Callable, ClassVar, Dict, Optional, Tuple, Type,
 
 import dataclasses
 
-from repro.core import persistence
+from repro.core import checks, persistence
 from repro.core.bundle import Bundle, gather
 from repro.core.driver import IterativeDriver, RunLog, RunOptions
 
@@ -201,7 +201,7 @@ def available() -> Tuple[str, ...]:
 
 _RUN_CONTROL_KEYS = ("max_iter", "tol", "chunk", "cost_every",
                      "cost_window", "straggler_factor",
-                     "checkpoint_every", "checkpoint_fn")
+                     "checkpoint_every", "checkpoint_fn", "checks")
 
 
 def derive_options(problem: Problem, base: RunOptions) -> RunOptions:
@@ -303,6 +303,12 @@ def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
     top.  Step wiring is *derived* from the Problem declaration
     (:func:`derive_options`) and cannot be passed here.
 
+    ``checks=True`` (or env ``REPRO_CHECKS=1``) turns on the runtime
+    contract sanitizers (``repro.core.checks``, DESIGN.md §17):
+    finite-state guards at every host sync, an ``eval_shape``
+    carry-contract pre-flight, and finite-cost validation — zero extra
+    dispatches when off.
+
     Checkpointing: ``checkpoint_dir=`` + ``checkpoint_every=k`` writes
     an atomic full-state checkpoint (data + replicated, via
     ``core.persistence.spill_bundle``) every k iterations;
@@ -334,6 +340,10 @@ def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
                 f"(DESIGN.md §14)")
     opts = options if options is not None else problem.default_options()
     opts = opts.merged_with(**run_opts)
+    # runtime contract sanitizers: checks=True per call, or REPRO_CHECKS=1
+    # force-enables for every solve() in the process (repro.core.checks)
+    if checks.checks_enabled(opts.checks) and not opts.checks:
+        opts = replace(opts, checks=True)
 
     bundle = problem.init_bundle(tuple(inputs), mesh)
     start_iter = 0

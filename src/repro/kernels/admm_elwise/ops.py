@@ -13,7 +13,8 @@ from functools import partial
 
 import jax
 
-from repro.kernels.admm_elwise.kernel import admm_elwise_fwd, auto_interpret
+from repro.kernels.admm_elwise.kernel import admm_elwise_fwd
+from repro.kernels.common import auto_interpret
 from repro.kernels.admm_elwise.ref import admm_elwise_ref
 
 

@@ -1,13 +1,26 @@
 """Shared helpers for the Pallas kernel wrappers."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 
 def auto_interpret() -> bool:
     """Compile the Mosaic kernel on TPU; fall back to interpreter mode
-    everywhere else (CPU/GPU hosts run the same traced jnp ops)."""
+    everywhere else (CPU/GPU hosts run the same traced jnp ops).
+
+    ``REPRO_FORCE_INTERPRET=1`` overrides the backend probe and forces
+    interpreter mode even on TPU — the escape hatch for debugging a
+    Mosaic miscompile or bisecting kernel-vs-oracle divergence on
+    hardware (set to ``0``/``false``/empty to disable; any other value
+    forces).  The env var is read per call, so tests can monkeypatch
+    it without re-importing kernel modules.
+    """
+    forced = os.environ.get("REPRO_FORCE_INTERPRET", "")
+    if forced.strip().lower() not in ("", "0", "false", "no"):
+        return True
     return jax.default_backend() != "tpu"
 
 

@@ -19,8 +19,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.condat_elwise.kernel import (auto_interpret,
-                                                condat_dual_fwd,
+from repro.kernels.common import auto_interpret
+from repro.kernels.condat_elwise.kernel import (condat_dual_fwd,
                                                 condat_primal_fwd)
 from repro.kernels.condat_elwise.ref import (condat_dual_ref,
                                              condat_primal_ref)

@@ -12,7 +12,8 @@ from functools import partial
 
 import jax
 
-from repro.kernels.dict_outer.kernel import (auto_interpret, dict_outer_fwd,
+from repro.kernels.common import auto_interpret
+from repro.kernels.dict_outer.kernel import (dict_outer_fwd,
                                              dict_outer_pair_fwd)
 from repro.kernels.dict_outer.ref import dict_outer_pair_ref, dict_outer_ref
 

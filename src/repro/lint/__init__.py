@@ -1,0 +1,26 @@
+"""repro.lint — JAX/Pallas-aware static analysis for this codebase.
+
+The hot path built in PRs 2–5 is dense with hazards JAX makes silent:
+donated buffers that poison later reads, hand-derived BlockSpec/grid
+math, tracer leaks (Python control flow / host casts on traced values),
+dtype promotion surprises, and a duck-typed Problem protocol that only
+fails at trace time.  This package is the machine-checked safety net:
+
+    python -m repro.lint src tests benchmarks
+
+Checkers register themselves into a rule registry (DESIGN.md §17); each
+finding carries a stable rule ID and ``file:line:col`` location.  A
+finding is suppressed by an end-of-line ``# repro-lint: disable=<rule>``
+comment (rule ID or slug, comma-separated, ``all`` for everything) or a
+file-wide ``# repro-lint: disable-file=<rule>``.
+
+The static pass is paired with the runtime sanitizer mode
+``solve(..., checks=True)`` / ``REPRO_CHECKS=1`` (``repro.core.checks``)
+— the lint catches what never runs, the sanitizer what only fails on
+real values.
+"""
+from repro.lint.core import (Finding, ModuleSource, Rule, all_rules,
+                             lint_file, lint_paths, register_checker)
+
+__all__ = ["Finding", "ModuleSource", "Rule", "all_rules", "lint_file",
+           "lint_paths", "register_checker"]

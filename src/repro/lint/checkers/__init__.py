@@ -1,0 +1,8 @@
+"""Built-in checkers.  Importing this package registers all of them
+(each module calls :func:`repro.lint.core.register_checker` at import
+time); ``repro.lint.core`` imports it lazily before every run."""
+from repro.lint.checkers import (donation, dtypes, imports, pallas,
+                                 protocol, tracer)
+
+__all__ = ["donation", "dtypes", "imports", "pallas", "protocol",
+           "tracer"]

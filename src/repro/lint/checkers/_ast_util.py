@@ -1,0 +1,172 @@
+"""Shared AST helpers for the checkers: dotted-name resolution, import
+alias tracking, decorator matching, and source-order statement walking."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+def dotted(node) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Local name -> fully qualified module/object it is bound to.
+
+    Covers ``import numpy as np`` (np -> numpy), ``import jax.numpy as
+    jnp`` (jnp -> jax.numpy) and ``from x.y import z [as w]``
+    (w -> x.y.z).
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def resolve(node, aliases: Dict[str, str]) -> Optional[str]:
+    """Fully qualified dotted name of an expression, through the import
+    aliases: with ``import jax.numpy as jnp``, ``jnp.sum`` ->
+    ``jax.numpy.sum``."""
+    d = dotted(node)
+    if d is None:
+        return None
+    head, _, rest = d.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def call_name(call: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    return resolve(call.func, aliases)
+
+
+def decorator_names(fn, aliases: Dict[str, str]) -> List[str]:
+    """Resolved names of every decorator (for ``@partial(jax.jit, ...)``
+    both ``functools.partial`` and ``jax.jit`` are reported)."""
+    names: List[str] = []
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call):
+            n = resolve(dec.func, aliases)
+            if n:
+                names.append(n)
+            for a in list(dec.args) + [kw.value for kw in dec.keywords]:
+                an = resolve(a, aliases)
+                if an:
+                    names.append(an)
+        else:
+            n = resolve(dec, aliases)
+            if n:
+                names.append(n)
+    return names
+
+
+def static_argnames(fn, aliases: Dict[str, str]) -> set:
+    """Literal ``static_argnames=`` sets from jit/partial decorators."""
+    out: set = set()
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                for c in ast.walk(kw.value):
+                    if isinstance(c, ast.Constant) and \
+                            isinstance(c.value, str):
+                        out.add(c.value)
+    return out
+
+
+def param_names(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def params_with_defaults(fn) -> set:
+    """Parameter names that carry a default value (positional or kw-only)."""
+    a = fn.args
+    out = set()
+    pos = a.posonlyargs + a.args
+    for p, _ in zip(reversed(pos), reversed(a.defaults)):
+        out.add(p.arg)
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            out.add(p.arg)
+    return out
+
+
+def functions(tree, *, nested: bool = True) -> List:
+    """Every FunctionDef/AsyncFunctionDef, optionally including nested."""
+    out = []
+
+    def visit(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append(child)
+                if nested:
+                    visit(child)
+            elif not isinstance(child, (ast.Lambda,)):
+                visit(child)
+
+    visit(tree)
+    return out
+
+
+def enclosing_function_map(tree) -> Dict[int, ast.AST]:
+    """Map id(node) -> the innermost FunctionDef containing it."""
+    owner: Dict[int, ast.AST] = {}
+
+    def visit(node, fn):
+        for child in ast.iter_child_nodes(node):
+            here = child if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef)) else fn
+            if fn is not None:
+                owner[id(child)] = fn
+            visit(child, here)
+
+    visit(tree, None)
+    return owner
+
+
+def walk_calls(node) -> Iterable[ast.Call]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def const_str(node) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def assigned_names(target) -> List[Tuple[str, ast.AST]]:
+    """Flatten an assignment target into (name, node) pairs."""
+    out: List[Tuple[str, ast.AST]] = []
+    if isinstance(target, ast.Name):
+        out.append((target.id, target))
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for el in target.elts:
+            out.extend(assigned_names(el))
+    elif isinstance(target, ast.Starred):
+        out.extend(assigned_names(target.value))
+    return out

@@ -1,0 +1,212 @@
+"""RPL101 donated-reuse: a buffer passed to a donated-argnums call site
+must not be read again in the same scope.
+
+The engine's compiled steps donate their carry buffers
+(``engine.make_step`` donates arg 0; ``make_scan_step`` /
+``make_chunk_cost_step`` donate args 0 and 3 — DESIGN.md §12): after
+
+    data, rep, trace = step(data, rep, start)
+
+the *old* ``data`` buffer is invalid, and XLA only errors if the stale
+array is actually dispatched — silent until the worst moment.  This
+checker tracks names bound to the known donated factories and flags any
+read of a donated argument after the call, unless the name was rebound
+first (the idiomatic ``data, ... = step(data, ...)`` rebinding clears
+it).
+
+The analysis is a linear source-order walk per function scope with a
+branch fork/join (a name donated in *either* branch of an ``if`` counts
+as donated after it) — no cross-function propagation, so passing a
+donated name into another function is not tracked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.lint.checkers._ast_util import (assigned_names, dotted,
+                                           import_aliases)
+from repro.lint.core import Finding, ModuleSource, Rule, register_checker
+
+RPL101 = Rule("RPL101", "donated-reuse",
+              "buffer read after being donated to a compiled step")
+
+# factory -> donated positional indices of the *returned* callable
+_FACTORIES = {
+    "make_step": (0,),
+    "make_scan_step": (0, 3),
+    "make_chunk_cost_step": (0, 3),
+}
+
+
+def _factory_of(node, aliases) -> Optional[Tuple[int, ...]]:
+    """Donated indices when ``node`` is a call to a known step factory
+    (``make_scan_step(...)`` / ``engine.make_scan_step(...)`` /
+    ``self._scan_step(k)`` — the driver's compiled-step accessor)."""
+    if not isinstance(node, ast.Call):
+        return None
+    d = dotted(node.func)
+    if d is None:
+        return None
+    # an explicit donate=False at the factory call disables donation
+    for kw in node.keywords:
+        if kw.arg == "donate" and isinstance(kw.value, ast.Constant) \
+                and not kw.value.value:
+            return None
+    leaf = d.split(".")[-1]
+    if leaf in _FACTORIES:
+        return _FACTORIES[leaf]
+    if leaf == "_scan_step":            # IterativeDriver._scan_step(k)
+        return (0, 3)
+    return None
+
+
+class _Scope:
+    def __init__(self, mod: ModuleSource):
+        self.mod = mod
+        self.findings: List[Finding] = []
+        # name -> line where it was donated
+        self.donated: Dict[str, int] = {}
+        # name -> donated indices (variables bound to factory results)
+        self.step_vars: Dict[str, Tuple[int, ...]] = {}
+
+    # -------------------------------------------------- expression pass
+    def visit_expr(self, node) -> None:
+        """Flag reads of donated names, then apply donations from calls
+        inside this expression (the call's own arguments are read
+        *before* the donation happens, so they are scanned first)."""
+        if node is None:
+            return
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                    and n.id in self.donated:
+                self.findings.append(self.mod.finding(
+                    RPL101, n,
+                    f"'{n.id}' was donated to a compiled step at line "
+                    f"{self.donated[n.id]} and read again here; rebind "
+                    f"it from the step's return instead"))
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                self._apply_donation(n)
+
+    def _donated_indices(self, call: ast.Call) -> Optional[Tuple[int, ...]]:
+        aliases = self._aliases
+        # direct: make_step(...)(data, rep)
+        idx = _factory_of(call.func, aliases) if \
+            isinstance(call.func, ast.Call) else None
+        if idx is not None:
+            return idx
+        # via a variable previously bound to a factory result
+        if isinstance(call.func, ast.Name) and \
+                call.func.id in self.step_vars:
+            return self.step_vars[call.func.id]
+        return None
+
+    def _apply_donation(self, call: ast.Call) -> None:
+        idx = self._donated_indices(call)
+        if idx is None:
+            return
+        for i in idx:
+            if i < len(call.args) and isinstance(call.args[i], ast.Name):
+                self.donated[call.args[i].id] = call.lineno
+
+    # -------------------------------------------------- statement pass
+    def run(self, stmts, aliases) -> None:
+        self._aliases = aliases
+        self._stmts(stmts)
+
+    def _store(self, name: str) -> None:
+        self.donated.pop(name, None)
+        self.step_vars.pop(name, None)
+
+    def _assign(self, node) -> None:
+        value = node.value
+        self.visit_expr(value)
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        names = [n for t in targets for n, _ in assigned_names(t)]
+        for n in names:
+            self._store(n)
+        # track variables bound to a factory result: step = make_...(...)
+        idx = _factory_of(value, self._aliases)
+        if idx is not None and len(names) == 1:
+            self.step_vars[names[0]] = idx
+
+    def _stmts(self, stmts) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                if getattr(st, "value", None) is not None:
+                    self._assign(st)
+            elif isinstance(st, (ast.Expr, ast.Return)):
+                self.visit_expr(st.value)
+            elif isinstance(st, (ast.If,)):
+                self.visit_expr(st.test)
+                self._fork([st.body, st.orelse])
+            elif isinstance(st, (ast.For, ast.AsyncFor)):
+                self.visit_expr(st.iter)
+                # two passes: donations late in the body poison reads at
+                # the top of the next trip around the loop
+                self._stmts(st.body)
+                self._stmts(st.body)
+                self._stmts(st.orelse)
+            elif isinstance(st, ast.While):
+                self.visit_expr(st.test)
+                self._stmts(st.body)
+                self._stmts(st.body)
+                self._stmts(st.orelse)
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                for item in st.items:
+                    self.visit_expr(item.context_expr)
+                self._stmts(st.body)
+            elif isinstance(st, ast.Try):
+                self._stmts(st.body)
+                for h in st.handlers:
+                    self._stmts(h.body)
+                self._stmts(st.orelse)
+                self._stmts(st.finalbody)
+            elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue            # separate scope, analyzed on its own
+            elif isinstance(st, ast.Delete):
+                for t in st.targets:
+                    for n, _ in assigned_names(t):
+                        self._store(n)
+            else:
+                for child in ast.iter_child_nodes(st):
+                    if isinstance(child, ast.expr):
+                        self.visit_expr(child)
+
+    def _fork(self, branches) -> None:
+        """Run each branch from the entry state; after the join a name
+        is donated if any branch left it donated (conservative)."""
+        entry_donated = dict(self.donated)
+        entry_steps = dict(self.step_vars)
+        merged: Dict[str, int] = {}
+        merged_steps: Dict[str, Tuple[int, ...]] = {}
+        for body in branches:
+            self.donated = dict(entry_donated)
+            self.step_vars = dict(entry_steps)
+            self._stmts(body)
+            merged.update(self.donated)
+            merged_steps.update(self.step_vars)
+        self.donated = merged
+        self.step_vars = merged_steps
+
+
+def _scopes(tree):
+    """Module body + every function body (each a separate scope)."""
+    yield tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node.body
+
+
+@register_checker("donation", [RPL101])
+def check(mod: ModuleSource):
+    aliases = import_aliases(mod.tree)
+    findings: List[Finding] = []
+    for body in _scopes(mod.tree):
+        scope = _Scope(mod)
+        scope.run(body, aliases)
+        findings.extend(scope.findings)
+    return findings

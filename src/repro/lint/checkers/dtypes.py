@@ -1,0 +1,177 @@
+"""Dtype promotion hygiene.
+
+RPL401 f64-dtype : a literal ``float64`` / ``complex128`` dtype request.
+                   This codebase runs under JAX's default f32 regime;
+                   an explicit f64 either silently truncates (x64
+                   disabled, the default) or doubles memory and
+                   disables the Pallas kernels (x64 enabled).
+RPL402 bf16-accum: a reduction (``jnp.sum``/``mean``/``dot``/``matmul``/
+                   ``einsum``/``@``/``.sum()``…) whose operand is
+                   explicitly cast to ``bfloat16``/``float16`` without a
+                   wider accumulation dtype.  Low-precision inputs are
+                   fine; *accumulating* in them silently loses the tail
+                   of large sums (DESIGN.md §17).  Fix with
+                   ``.astype(jnp.float32)`` before the reduction or a
+                   ``preferred_element_type``/``dtype=`` on the
+                   reduction itself.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.lint.checkers._ast_util import import_aliases, resolve
+from repro.lint.core import Finding, ModuleSource, Rule, register_checker
+
+RPL401 = Rule("RPL401", "f64-dtype",
+              "explicit float64/complex128 dtype in an f32 codebase")
+RPL402 = Rule("RPL402", "bf16-accum",
+              "reduction accumulates in bf16/f16 without a wider dtype")
+
+_WIDE_DTYPES = {"float64", "complex128", "f64", "double"}
+_NARROW_DTYPES = {"bfloat16", "float16", "bf16", "f16", "half"}
+_REDUCTIONS = {"sum", "mean", "prod", "cumsum", "cumprod", "dot",
+               "matmul", "vdot", "tensordot", "einsum", "trace", "var",
+               "std"}
+# keywords that widen the accumulator and clear RPL402
+_ACCUM_KWARGS = {"dtype", "preferred_element_type", "precision",
+                 "accum_dtype"}
+
+
+def _dtype_token(node, aliases) -> Optional[str]:
+    """The dtype a node names, as a lowercase token, else None.
+
+    Recognizes ``jnp.float64``, ``np.float64``, ``"float64"``, and
+    ``jnp.dtype("float64")``-style spellings.
+    """
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.lower()
+    name = resolve(node, aliases)
+    if name is not None:
+        leaf = name.split(".")[-1].lower()
+        if name.startswith(("jax", "numpy", "ml_dtypes")):
+            return leaf
+    if isinstance(node, ast.Call) and node.args:
+        fn = resolve(node.func, aliases)
+        if fn is not None and fn.split(".")[-1] == "dtype":
+            return _dtype_token(node.args[0], aliases)
+    return None
+
+
+def _narrow_cast(node, aliases) -> bool:
+    """True when ``node`` is explicitly cast/created as bf16/f16:
+    ``x.astype(jnp.bfloat16)``, ``jnp.asarray(x, dtype=jnp.bfloat16)``,
+    or any call with a narrow ``dtype=`` keyword."""
+    if not isinstance(node, ast.Call):
+        return False
+    if isinstance(node.func, ast.Attribute) and \
+            node.func.attr == "astype" and node.args:
+        tok = _dtype_token(node.args[0], aliases)
+        return tok in _NARROW_DTYPES
+    for kw in node.keywords:
+        if kw.arg == "dtype":
+            tok = _dtype_token(kw.value, aliases)
+            if tok in _NARROW_DTYPES:
+                return True
+    return False
+
+
+def _has_wide_accumulator(call: ast.Call, aliases) -> bool:
+    for kw in call.keywords:
+        if kw.arg in _ACCUM_KWARGS:
+            tok = _dtype_token(kw.value, aliases)
+            if tok is None or tok not in _NARROW_DTYPES:
+                return True
+    return False
+
+
+def _contains_narrow(node, aliases, depth: int = 0) -> Optional[ast.AST]:
+    """A bf16/f16-cast subexpression feeding this operand, if any.
+
+    Only looks through arithmetic/calls a few levels deep — a narrow
+    cast buried behind another (widening) reduction is that reduction's
+    problem, not this one's.
+    """
+    if depth > 4 or node is None:
+        return None
+    if _narrow_cast(node, aliases):
+        return node
+    if isinstance(node, ast.BinOp):
+        return _contains_narrow(node.left, aliases, depth + 1) or \
+            _contains_narrow(node.right, aliases, depth + 1)
+    if isinstance(node, ast.UnaryOp):
+        return _contains_narrow(node.operand, aliases, depth + 1)
+    return None
+
+
+@register_checker("dtypes", [RPL401, RPL402])
+def check(mod: ModuleSource):
+    aliases = import_aliases(mod.tree)
+    findings: List[Finding] = []
+
+    for node in ast.walk(mod.tree):
+        # ---- RPL401: any reference to a wide dtype ------------------
+        # host numpy is f64 by default, so only *jax*-side wide dtypes
+        # are flagged (np.float64 reference computations in tests are
+        # fine — they never enter the traced pipeline)
+        tok = None
+        if isinstance(node, (ast.Attribute, ast.Name)):
+            name = resolve(node, aliases)
+            if name is not None and \
+                    name.split(".")[-1].lower() in _WIDE_DTYPES and \
+                    name.startswith("jax"):
+                tok = name.split(".")[-1].lower()
+        elif isinstance(node, ast.Call):
+            fn_name = resolve(node.func, aliases)
+            if fn_name is not None and fn_name.startswith("jax"):
+                for kw in node.keywords:
+                    if kw.arg == "dtype" and \
+                            isinstance(kw.value, ast.Constant):
+                        t = _dtype_token(kw.value, aliases)
+                        if t in _WIDE_DTYPES:
+                            tok = t
+        if tok is not None:
+            findings.append(mod.finding(
+                RPL401, node,
+                f"explicit {tok} — silently truncated to f32 unless "
+                f"jax_enable_x64 is set; keep the pipeline f32 or gate "
+                f"behind a config"))
+            continue
+
+        # ---- RPL402: narrow accumulation in reductions --------------
+        if isinstance(node, ast.Call):
+            name = resolve(node.func, aliases)
+            leaf = None
+            if name is not None and name.startswith(("jax.numpy",
+                                                     "jax.lax")):
+                leaf = name.split(".")[-1]
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _REDUCTIONS:
+                leaf = node.func.attr       # x.sum() method form
+            if leaf in _REDUCTIONS and not \
+                    _has_wide_accumulator(node, aliases):
+                operands = list(node.args)
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in _REDUCTIONS:
+                    operands.append(node.func.value)
+                for op in operands:
+                    narrow = _contains_narrow(op, aliases)
+                    if narrow is not None:
+                        findings.append(mod.finding(
+                            RPL402, node,
+                            f"'{leaf}' accumulates a bf16/f16-cast "
+                            f"operand without a wider dtype — pass "
+                            f"dtype=/preferred_element_type= or cast "
+                            f"the operand to float32 first"))
+                        break
+        elif isinstance(node, ast.BinOp) and \
+                isinstance(node.op, ast.MatMult):
+            for op in (node.left, node.right):
+                if _contains_narrow(op, aliases) is not None:
+                    findings.append(mod.finding(
+                        RPL402, node,
+                        "'@' matmul on a bf16/f16-cast operand "
+                        "accumulates in low precision — use jnp.matmul "
+                        "with preferred_element_type=jnp.float32"))
+                    break
+    return findings

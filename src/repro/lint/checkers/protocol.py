@@ -1,0 +1,139 @@
+"""Problem-protocol conformance for ``@register``-ed workloads.
+
+RPL501 problem-hooks    : a registered Problem subclass is missing a
+                          required hook or declares a hook with the
+                          wrong arity.  The protocol is duck-typed —
+                          without this check, a drifted signature only
+                          fails deep inside ``derive_options``/trace.
+RPL502 problem-metadata : class metadata and declared hooks disagree
+                          (``replicated_in_carry`` without
+                          ``refresh_replicated``/``light_step``,
+                          ``refresh_replicated`` without
+                          ``replicated_in_carry``, or
+                          ``default_cost_every="chunk"`` without the
+                          ``cost`` + ``light_step`` pair it wires up).
+
+Expected hook arities (incl. ``self`` — DESIGN.md §14):
+``init_bundle(self, inputs, mesh)``, ``full_step(self, d, rep, axes)``,
+``light_step(self, d, rep, axes)``, ``cost(self, d, rep, axes)``,
+``refresh_replicated(self, rep, out)``, ``finalize(self, bundle, log)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.lint.checkers._ast_util import (import_aliases, param_names,
+                                           resolve)
+from repro.lint.core import Finding, ModuleSource, Rule, register_checker
+
+RPL501 = Rule("RPL501", "problem-hooks",
+              "registered Problem missing/mis-declared protocol hook")
+RPL502 = Rule("RPL502", "problem-metadata",
+              "Problem metadata inconsistent with its declared hooks")
+
+_REQUIRED = {"init_bundle": 3, "full_step": 4}
+_OPTIONAL = {"light_step": 4, "cost": 4, "refresh_replicated": 3,
+             "finalize": 3}
+
+
+def _registered(cls: ast.ClassDef, aliases) -> bool:
+    for dec in cls.decorator_list:
+        if isinstance(dec, ast.Call):
+            name = resolve(dec.func, aliases)
+            if name is not None and name.split(".")[-1] == "register":
+                return True
+    return False
+
+
+def _methods(cls: ast.ClassDef) -> Dict[str, ast.AST]:
+    return {st.name: st for st in cls.body
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _class_flag(cls: ast.ClassDef, name: str):
+    """Literal value of a class-level ``name = <const>``, else None."""
+    for st in cls.body:
+        targets = []
+        if isinstance(st, ast.Assign):
+            targets = st.targets
+        elif isinstance(st, ast.AnnAssign) and st.value is not None:
+            targets = [st.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == name and \
+                    isinstance(st.value, ast.Constant):
+                return st.value.value
+    return None
+
+
+def _arity_ok(fn, want: int) -> bool:
+    """Exact positional arity, modulo trailing defaulted params."""
+    names = param_names(fn)
+    if fn.args.vararg or fn.args.kwarg:
+        return True                        # forwarding wrapper — accept
+    n_required = len(fn.args.posonlyargs + fn.args.args) - \
+        len(fn.args.defaults)
+    return n_required <= want <= len(names)
+
+
+def _check_class(mod, cls, findings) -> None:
+    methods = _methods(cls)
+
+    for hook, arity in _REQUIRED.items():
+        fn = methods.get(hook)
+        if fn is None:
+            findings.append(mod.finding(
+                RPL501, cls,
+                f"registered Problem '{cls.name}' does not declare "
+                f"required hook '{hook}'"))
+        elif not _arity_ok(fn, arity):
+            findings.append(mod.finding(
+                RPL501, fn,
+                f"'{cls.name}.{hook}' takes {len(param_names(fn))} "
+                f"params, protocol expects {arity} "
+                f"(incl. self — DESIGN.md §14)"))
+
+    for hook, arity in _OPTIONAL.items():
+        fn = methods.get(hook)
+        if fn is not None and not _arity_ok(fn, arity):
+            findings.append(mod.finding(
+                RPL501, fn,
+                f"'{cls.name}.{hook}' takes {len(param_names(fn))} "
+                f"params, protocol expects {arity} "
+                f"(incl. self — DESIGN.md §14)"))
+
+    # ---- metadata consistency (mirrors derive_options' runtime
+    # validation, but at lint time and for *all* registered classes) ---
+    replicated = _class_flag(cls, "replicated_in_carry")
+    cost_every = _class_flag(cls, "default_cost_every")
+    if replicated is True:
+        for needed in ("refresh_replicated", "light_step"):
+            if needed not in methods:
+                findings.append(mod.finding(
+                    RPL502, cls,
+                    f"'{cls.name}' sets replicated_in_carry but does "
+                    f"not declare {needed}() — the broadcast carry "
+                    f"cannot advance (derive_options will reject it)"))
+    if "refresh_replicated" in methods and replicated is not True:
+        findings.append(mod.finding(
+            RPL502, cls,
+            f"'{cls.name}' declares refresh_replicated() without "
+            f"replicated_in_carry=True — the hook is dead wiring"))
+    if cost_every == "chunk":
+        for needed in ("cost", "light_step"):
+            if needed not in methods:
+                findings.append(mod.finding(
+                    RPL502, cls,
+                    f"'{cls.name}' defaults cost_every='chunk' but "
+                    f"does not declare {needed}() — the chunk-cost "
+                    f"step cannot be assembled"))
+
+
+@register_checker("protocol", [RPL501, RPL502])
+def check(mod: ModuleSource):
+    aliases = import_aliases(mod.tree)
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef) and _registered(node, aliases):
+            _check_class(mod, node, findings)
+    return findings

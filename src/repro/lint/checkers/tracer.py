@@ -1,0 +1,338 @@
+"""Tracer hygiene inside jit/pallas-reachable functions.
+
+RPL301 traced-branch   : Python control flow (``if``/``while``/``for``/
+                         ternary/comprehension filter/``assert``) on a
+                         traced value — concretization error at trace
+                         time, or worse, silent trace-time constant.
+RPL302 host-cast       : ``bool()``/``int()``/``float()`` or
+                         ``.item()``/``.tolist()`` on a traced value —
+                         forces a host sync / breaks tracing.
+RPL303 numpy-on-traced : ``np.*`` call on a traced value — silently
+                         drops out of the traced computation.
+
+Reachability: a function is *jit-reachable* when it is decorated with
+``jax.jit`` (directly or via ``functools.partial``), or passed by name
+into ``jax.jit`` / ``pl.pallas_call`` / ``lax.scan`` / ``lax.cond`` /
+``lax.while_loop`` / ``lax.fori_loop`` / ``shard_map`` / ``jax.vmap`` /
+``jax.grad`` / ``jax.eval_shape``, or is a lambda given to one of those.
+
+Taint: parameters of a reachable function are traced unless they carry
+a default value, appear in the decorator's ``static_argnames``, or are
+conventionally-static names (``axes``/``mesh``/``cfg``/``config``/
+``opts``).  Taint flows through arithmetic, ``jnp.*``/``lax.*`` calls,
+method chains, subscripts, and plain assignment.  It stops at
+``.shape``/``.dtype``/``.ndim``-style metadata, shape-query helpers
+(``jnp.ndim``, ``len``, ``isinstance`` …), ``is``/``is not`` compares,
+and container literals (their truthiness is their static length).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.lint.checkers._ast_util import (decorator_names, dotted,
+                                           import_aliases,
+                                           params_with_defaults, resolve,
+                                           static_argnames)
+from repro.lint.core import Finding, ModuleSource, Rule, register_checker
+
+RPL301 = Rule("RPL301", "traced-branch",
+              "Python control flow on a traced value")
+RPL302 = Rule("RPL302", "host-cast",
+              "host-side cast of a traced value")
+RPL303 = Rule("RPL303", "numpy-on-traced",
+              "numpy call on a traced value inside a jitted function")
+
+# call targets whose function-valued arguments become jit-reachable
+_TRACING_ENTRYPOINTS = {
+    "jit", "pallas_call", "scan", "cond", "while_loop", "fori_loop",
+    "shard_map", "vmap", "pmap", "grad", "value_and_grad", "eval_shape",
+    "checkpoint", "remat", "switch", "custom_vjp", "custom_jvp",
+}
+_TRACING_PREFIXES = ("jax", "functools.partial")
+
+# parameters that are static by convention in this codebase
+_STATIC_PARAM_NAMES = {"axes", "mesh", "cfg", "config", "opts", "self"}
+
+# metadata attributes that yield static values even on tracers
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "sharding", "aval",
+                 "weak_type", "itemsize"}
+
+# calls that return static (host) values even on traced arguments
+_STATIC_CALLS = {
+    "len", "isinstance", "issubclass", "type", "range", "enumerate",
+    "zip", "hasattr", "getattr", "callable", "sorted", "min", "max",
+    "jax.numpy.ndim", "jax.numpy.shape", "jax.numpy.size",
+    "jax.numpy.issubdtype", "jax.numpy.result_type", "jax.numpy.dtype",
+    "jax.dtypes.issubdtype", "jax.dtypes.result_type",
+    "jax.eval_shape", "jax.tree_util.tree_structure",
+    "jax.tree.structure",
+}
+
+_HOST_CASTS = {"bool", "int", "float", "complex"}
+_HOST_METHODS = {"item", "tolist", "__bool__", "__float__", "__index__"}
+
+
+def _is_tracing_call(call: ast.Call, aliases) -> bool:
+    name = resolve(call.func, aliases)
+    if name is None:
+        return False
+    leaf = name.split(".")[-1]
+    if leaf not in _TRACING_ENTRYPOINTS:
+        return False
+    # require a jax-ish qualification so a local helper named ``scan``
+    # does not pull its arguments into tracing scope
+    return name.startswith(_TRACING_PREFIXES) or "pallas" in name \
+        or "lax" in name or name == leaf == "shard_map" or leaf == "jit"
+
+
+def _jit_decorated(fn, aliases) -> bool:
+    for name in decorator_names(fn, aliases):
+        leaf = name.split(".")[-1]
+        if leaf in ("jit", "pjit") and (name.startswith("jax")
+                                        or leaf == name):
+            return True
+    return False
+
+
+def _collect_roots(tree, aliases):
+    """(reachable FunctionDefs, reachable Lambdas).
+
+    A name passed into a tracing entrypoint marks the local def of that
+    name; lambdas passed inline are collected directly.
+    """
+    defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+
+    roots: Set[int] = set()
+    root_nodes = []
+
+    def add(node):
+        if id(node) not in roots:
+            roots.add(id(node))
+            root_nodes.append(node)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and _jit_decorated(node, aliases):
+            add(node)
+        elif isinstance(node, ast.Call) and _is_tracing_call(node, aliases):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in defs:
+                    add(defs[arg.id])
+                elif isinstance(arg, ast.Lambda):
+                    add(arg)
+    return root_nodes
+
+
+class _Taint:
+    """Expression taint evaluation against a set of traced names."""
+
+    def __init__(self, tainted: Set[str], aliases):
+        self.names = tainted
+        self.aliases = aliases
+
+    def tainted(self, node) -> bool:
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value)
+        if isinstance(node, (ast.Dict, ast.List, ast.Tuple, ast.Set,
+                             ast.ListComp, ast.DictComp, ast.SetComp,
+                             ast.GeneratorExp)):
+            return False                  # truthiness = static length
+        if isinstance(node, ast.Call):
+            return self._call_tainted(node)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False              # identity checks are host bools
+            return self.tainted(node.left) or \
+                any(self.tainted(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted(v) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left) or self.tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.tainted(node.body) or self.tainted(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.tainted(node.value)
+        if isinstance(node, (ast.JoinedStr, ast.FormattedValue)):
+            return False
+        return False
+
+    def _call_tainted(self, call: ast.Call) -> bool:
+        name = resolve(call.func, self.aliases)
+        if name is not None:
+            if name in _STATIC_CALLS or \
+                    name.split(".")[-1] in ("ndim", "shape") and \
+                    name.startswith("jax"):
+                return False
+            if name.startswith(("jax.numpy", "jax.lax", "jax.nn",
+                                "jax.random", "jax.scipy")):
+                return True
+        # method call on a traced value (x.sum(), x.astype(...))
+        if isinstance(call.func, ast.Attribute) and \
+                self.tainted(call.func.value):
+            return True
+        # unknown callee: conservatively propagate argument taint
+        return any(self.tainted(a) for a in call.args) or \
+            any(self.tainted(kw.value) for kw in call.keywords)
+
+
+def _traced_params(fn, aliases) -> Set[str]:
+    if isinstance(fn, ast.Lambda):
+        return {a.arg for a in fn.args.args
+                if a.arg not in _STATIC_PARAM_NAMES}
+    defaulted = params_with_defaults(fn)
+    static = static_argnames(fn, aliases) | _STATIC_PARAM_NAMES
+    out = set()
+    for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs:
+        if a.arg in defaulted or a.arg in static:
+            continue
+        out.add(a.arg)
+    return out
+
+
+def _infer_taint(fn, aliases) -> Set[str]:
+    """Traced names in ``fn``'s body: params plus assignment fixpoint."""
+    tainted = _traced_params(fn, aliases)
+    if isinstance(fn, ast.Lambda):
+        return tainted
+    body_stmts = _own_statements(fn)
+    for _ in range(4):                       # fixpoint (loops/reorders)
+        t = _Taint(tainted, aliases)
+        changed = False
+        for st in body_stmts:
+            targets = None
+            if isinstance(st, ast.Assign):
+                targets, value = st.targets, st.value
+            elif isinstance(st, (ast.AugAssign, ast.AnnAssign)) and \
+                    getattr(st, "value", None) is not None:
+                targets, value = [st.target], st.value
+            elif isinstance(st, (ast.For, ast.AsyncFor)):
+                targets, value = [st.target], st.iter
+            else:
+                continue
+            if not t.tainted(value):
+                continue
+            for tgt in targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name) and n.id not in tainted:
+                        tainted.add(n.id)
+                        changed = True
+        if not changed:
+            break
+    return tainted
+
+
+def _own_statements(fn) -> List[ast.stmt]:
+    """Statements of ``fn`` excluding nested function bodies (nested
+    defs are analyzed as their own roots when reachable)."""
+    out: List[ast.stmt] = []
+
+    def visit(stmts):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            out.append(st)
+            for field in ("body", "orelse", "finalbody"):
+                visit(getattr(st, field, []) or [])
+            for h in getattr(st, "handlers", []) or []:
+                visit(h.body)
+
+    visit(fn.body)
+    return out
+
+
+def _check_root(mod, fn, aliases, findings) -> None:
+    tainted = _infer_taint(fn, aliases)
+    if not tainted:
+        return
+    t = _Taint(tainted, aliases)
+    label = getattr(fn, "name", "<lambda>")
+
+    if isinstance(fn, ast.Lambda):
+        _check_expr_tree(mod, fn.body, t, label, findings)
+        return
+
+    for st in _own_statements(fn):
+        if isinstance(st, (ast.If, ast.While)) and t.tainted(st.test):
+            findings.append(mod.finding(
+                RPL301, st.test,
+                f"Python branch on traced value in jit-reachable "
+                f"'{label}' — use jnp.where/lax.cond"))
+        elif isinstance(st, (ast.For, ast.AsyncFor)) and t.tainted(st.iter):
+            findings.append(mod.finding(
+                RPL301, st.iter,
+                f"Python loop over traced value in jit-reachable "
+                f"'{label}' — use lax.scan/fori_loop"))
+        elif isinstance(st, ast.Assert) and t.tainted(st.test):
+            findings.append(mod.finding(
+                RPL301, st.test,
+                f"assert on traced value in jit-reachable '{label}' — "
+                f"use checkify or a runtime sanitizer"))
+        for expr in ast.walk(st):
+            if isinstance(expr, (ast.stmt,)):
+                continue
+            _check_expr(mod, expr, t, label, findings)
+
+
+def _check_expr_tree(mod, root, t, label, findings) -> None:
+    for expr in ast.walk(root):
+        _check_expr(mod, expr, t, label, findings)
+
+
+def _check_expr(mod, expr, t, label, findings) -> None:
+    if isinstance(expr, ast.IfExp) and t.tainted(expr.test):
+        findings.append(mod.finding(
+            RPL301, expr.test,
+            f"ternary on traced value in jit-reachable '{label}' — "
+            f"use jnp.where"))
+    elif isinstance(expr, ast.comprehension):
+        for cond in expr.ifs:
+            if t.tainted(cond):
+                findings.append(mod.finding(
+                    RPL301, cond,
+                    f"comprehension filter on traced value in "
+                    f"jit-reachable '{label}'"))
+    elif isinstance(expr, ast.Call):
+        name = resolve(expr.func, t.aliases)
+        if name in _HOST_CASTS and expr.args and t.tainted(expr.args[0]):
+            findings.append(mod.finding(
+                RPL302, expr,
+                f"{name}() on traced value in jit-reachable '{label}' "
+                f"forces a host sync"))
+        elif isinstance(expr.func, ast.Attribute) and \
+                expr.func.attr in _HOST_METHODS and \
+                t.tainted(expr.func.value):
+            findings.append(mod.finding(
+                RPL302, expr,
+                f".{expr.func.attr}() on traced value in jit-reachable "
+                f"'{label}' forces a host sync"))
+        elif name is not None and name.startswith("numpy.") and \
+                (any(t.tainted(a) for a in expr.args) or
+                 any(t.tainted(kw.value) for kw in expr.keywords)):
+            findings.append(mod.finding(
+                RPL303, expr,
+                f"{name.replace('numpy', 'np', 1)}() on traced value in "
+                f"jit-reachable '{label}' — use jnp instead"))
+
+
+@register_checker("tracer", [RPL301, RPL302, RPL303])
+def check(mod: ModuleSource):
+    aliases = import_aliases(mod.tree)
+    findings: List[Finding] = []
+    for fn in _collect_roots(mod.tree, aliases):
+        _check_root(mod, fn, aliases, findings)
+    return findings

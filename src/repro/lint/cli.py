@@ -1,0 +1,84 @@
+"""``python -m repro.lint src tests benchmarks`` — the CLI runner.
+
+Exit status: 0 when clean, 1 when any finding survives suppression,
+2 on usage errors.  ``--report PATH`` additionally writes a JSON
+artifact (list of findings + rule table) for CI upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.lint.core import all_rules, iter_py_files, lint_file
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="JAX/Pallas-aware static analysis for this repo")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to lint (default: src)")
+    p.add_argument("--report", metavar="PATH", default=None,
+                   help="write a JSON findings report to PATH")
+    p.add_argument("--select", metavar="RULES", default=None,
+                   help="comma-separated rule IDs/slugs to keep "
+                        "(default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule table and exit")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress the per-finding lines (summary only)")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _parser().parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id}  {r.slug:<22} {r.summary}")
+        return 0
+
+    selected = None
+    if args.select:
+        selected = {t.strip().lower() for t in args.select.split(",")
+                    if t.strip()}
+
+    files = iter_py_files(args.paths)
+    if not files:
+        print(f"repro.lint: no .py files under {args.paths}",
+              file=sys.stderr)
+        return 2
+
+    findings = []
+    for f in files:
+        found = lint_file(f)
+        if selected is not None:
+            found = [x for x in found
+                     if {x.rule.id.lower(), x.rule.slug.lower()}
+                     & selected]
+        findings.extend(found)
+
+    if not args.quiet:
+        for f in findings:
+            print(f.format())
+
+    if args.report:
+        report = {
+            "files_checked": len(files),
+            "findings": [f.to_json() for f in findings],
+            "rules": [{"id": r.id, "slug": r.slug, "summary": r.summary}
+                      for r in all_rules()],
+        }
+        with open(args.report, "w") as fh:
+            json.dump(report, fh, indent=2)
+
+    n = len(findings)
+    print(f"repro.lint: {len(files)} files checked, {n} finding"
+          f"{'' if n == 1 else 's'}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":      # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,192 @@
+"""Checker registry, findings, suppressions, and the file walker.
+
+A *checker* is a function ``check(mod: ModuleSource) -> Iterable[Finding]``
+registered with :func:`register_checker` together with the rules it can
+emit.  The runner parses each ``.py`` file once, hands the shared
+:class:`ModuleSource` to every checker, then filters the collected
+findings through the suppression comments before reporting.
+
+Rule IDs are stable (``RPL101`` …) and each rule also has a slug
+(``donated-reuse``) — suppressions accept either form.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+# --------------------------------------------------------------------
+# Rules and findings
+# --------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One diagnostic: stable ID, short slug, one-line description."""
+    id: str                 # e.g. "RPL101" — never renumbered
+    slug: str               # e.g. "donated-reuse" — suppression alias
+    summary: str
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: Rule
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule.id}[{self.rule.slug}] {self.message}")
+
+    def to_json(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "rule": self.rule.id, "slug": self.rule.slug,
+                "message": self.message}
+
+
+@dataclass
+class ModuleSource:
+    """One parsed source file, shared by every checker."""
+    path: Path
+    text: str
+    tree: ast.Module
+    lines: List[str] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.lines:
+            self.lines = self.text.splitlines()
+
+    def finding(self, rule: Rule, node, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(path=str(self.path), line=line, col=col,
+                       rule=rule, message=message)
+
+
+# --------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------
+
+_CHECKERS: List[Tuple[str, Callable[[ModuleSource], Iterable[Finding]]]] = []
+_RULES: Dict[str, Rule] = {}
+
+
+def register_checker(name: str, rules: Sequence[Rule]):
+    """Decorator: register ``check(mod) -> findings`` under ``name``,
+    declaring the rules it may emit (IDs must be unique repo-wide)."""
+
+    def deco(fn):
+        for r in rules:
+            prev = _RULES.get(r.id)
+            if prev is not None and prev != r:
+                raise ValueError(f"rule id {r.id} registered twice")
+            _RULES[r.id] = r
+        _CHECKERS.append((name, fn))
+        return fn
+
+    return deco
+
+
+def all_rules() -> Tuple[Rule, ...]:
+    _load_builtin_checkers()
+    return tuple(sorted(_RULES.values(), key=lambda r: r.id))
+
+
+def _load_builtin_checkers():
+    # import for side effect: each module registers itself
+    from repro.lint import checkers  # noqa: F401
+
+
+# --------------------------------------------------------------------
+# Suppressions
+# --------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*([A-Za-z0-9_,\s-]+)")
+
+
+def _suppressions(mod: ModuleSource):
+    """(per-line {lineno: set(tokens)}, file-wide set(tokens))."""
+    per_line: Dict[int, set] = {}
+    whole_file: set = set()
+    for i, line in enumerate(mod.lines, start=1):
+        if "repro-lint" not in line:
+            continue
+        for m in _SUPPRESS_RE.finditer(line):
+            kind, rules = m.group(1), m.group(2)
+            tokens = {t.strip().lower() for t in rules.split(",")
+                      if t.strip()}
+            if kind == "disable-file":
+                whole_file |= tokens
+            else:
+                per_line.setdefault(i, set()).update(tokens)
+    return per_line, whole_file
+
+
+def _suppressed(f: Finding, per_line, whole_file) -> bool:
+    keys = {"all", f.rule.id.lower(), f.rule.slug.lower()}
+    if whole_file & keys:
+        return True
+    return bool(per_line.get(f.line, set()) & keys)
+
+
+# --------------------------------------------------------------------
+# Runner
+# --------------------------------------------------------------------
+
+def lint_file(path, *, checkers: Optional[Sequence[str]] = None
+              ) -> List[Finding]:
+    """Run every registered checker over one file (post-suppression)."""
+    _load_builtin_checkers()
+    path = Path(path)
+    text = path.read_text()
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError as e:
+        rule = Rule("RPL000", "syntax-error", "file does not parse")
+        return [Finding(str(path), e.lineno or 1, e.offset or 0, rule,
+                        f"syntax error: {e.msg}")]
+    mod = ModuleSource(path=path, text=text, tree=tree)
+    per_line, whole_file = _suppressions(mod)
+    found: List[Finding] = []
+    for name, fn in _CHECKERS:
+        if checkers is not None and name not in checkers:
+            continue
+        found.extend(fn(mod))
+    found = [f for f in found
+             if not _suppressed(f, per_line, whole_file)]
+    # dedupe: loop/branch re-walks may report one site twice (distinct
+    # messages at one site are distinct findings, so the message is
+    # part of the key)
+    unique = {(f.path, f.line, f.col, f.rule.id, f.message): f
+              for f in found}
+    found = sorted(unique.values(),
+                   key=lambda f: (f.path, f.line, f.col, f.rule.id,
+                                  f.message))
+    return found
+
+
+def iter_py_files(paths: Sequence) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+        elif p.is_dir():
+            files.extend(sorted(
+                q for q in p.rglob("*.py")
+                if "__pycache__" not in q.parts))
+    return files
+
+
+def lint_paths(paths: Sequence, *,
+               checkers: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` file under ``paths`` (files or directories)."""
+    findings: List[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(lint_file(f, checkers=checkers))
+    return findings

@@ -1,0 +1,166 @@
+"""Runtime contract sanitizers (``solve(..., checks=True)`` /
+``REPRO_CHECKS=1``, DESIGN.md §17) and the ``REPRO_FORCE_INTERPRET``
+kernel-backend override."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bundle import Bundle
+from repro.core.checks import (CheckError, assert_all_finite,
+                               assert_costs_finite, checks_enabled)
+from repro.core.driver import IterativeDriver, RunOptions
+from repro.core.problem import Problem, solve
+
+KEY = jax.random.PRNGKey(7)
+
+
+class Quad(Problem):
+    """Tiny averaging iteration with injectable contract violations."""
+
+    def __init__(self, bad=None):
+        self.bad = bad
+
+    def init_bundle(self, inputs, mesh):
+        (y,) = inputs
+        x0 = jnp.zeros_like(y)
+        if self.bad == "init_nan":
+            x0 = x0.at[0].set(jnp.nan)
+        return Bundle.create({"x": x0, "y": y}, mesh=mesh)
+
+    def full_step(self, d, rep, axes):
+        x = 0.5 * (d["x"] + d["y"])
+        if self.bad == "nan":
+            x = x * jnp.float32(0.0) / jnp.float32(0.0)
+        if self.bad == "dtype":
+            x = x.astype(jnp.float16)   # carry dtype flip f32 -> f16
+        cost = jnp.sum((x - d["y"]) ** 2)
+        return dict(d, x=x), cost
+
+
+@pytest.fixture(scope="module")
+def y():
+    return jnp.asarray(np.linspace(0.0, 1.0, 32), jnp.float32)
+
+
+# ------------------------------------------------------------ clean run
+def test_checks_clean_run_identical_trajectory(y):
+    off = solve(Quad(), y, max_iter=8, chunk=4, tol=0.0)
+    on = solve(Quad(), y, max_iter=8, chunk=4, tol=0.0, checks=True)
+    np.testing.assert_array_equal(np.asarray(off.costs),
+                                  np.asarray(on.costs))
+
+
+# -------------------------------------------------------- finite guards
+def test_checks_catch_injected_nan_chunked(y):
+    with pytest.raises(CheckError, match="NaN"):
+        solve(Quad("nan"), y, max_iter=8, chunk=4, tol=0.0, checks=True)
+
+
+def test_checks_catch_injected_nan_per_step(y):
+    with pytest.raises(CheckError, match="iteration 0"):
+        solve(Quad("nan"), y, max_iter=4, chunk=1, tol=0.0, checks=True)
+
+
+def test_checks_reject_nonfinite_init_bundle(y):
+    with pytest.raises(CheckError, match="initial bundle state"):
+        solve(Quad("init_nan"), y, max_iter=4, chunk=4, tol=0.0,
+              checks=True)
+
+
+def test_checks_off_is_silent(y):
+    # the exact same poisoned run proceeds when checks are off — that
+    # is the failure mode the sanitizer exists for
+    sol = solve(Quad("nan"), y, max_iter=4, chunk=2, tol=0.0)
+    assert np.isnan(sol.costs).any()
+
+
+# ------------------------------------------------- carry-contract guard
+def test_checks_catch_carry_dtype_flip_chunked(y):
+    # caught at trace time (eval_shape pre-flight), before any dispatch
+    with pytest.raises(CheckError, match="before any dispatch"):
+        solve(Quad("dtype"), y, max_iter=8, chunk=4, tol=0.0,
+              checks=True)
+
+
+def test_checks_catch_carry_dtype_flip_per_step(y):
+    with pytest.raises(CheckError, match="dtype float32 -> float16"):
+        solve(Quad("dtype"), y, max_iter=4, chunk=1, tol=0.0,
+              checks=True)
+
+
+# ------------------------------------------------------- env force-mode
+def test_repro_checks_env_force_enables(y, monkeypatch):
+    monkeypatch.setenv("REPRO_CHECKS", "1")
+    with pytest.raises(CheckError):
+        solve(Quad("nan"), y, max_iter=8, chunk=4, tol=0.0)
+
+
+def test_repro_checks_env_falsy_values_stay_off(monkeypatch):
+    for val in ("", "0", "false", "no"):
+        monkeypatch.setenv("REPRO_CHECKS", val)
+        assert checks_enabled(False) is False
+    monkeypatch.setenv("REPRO_CHECKS", "1")
+    assert checks_enabled(False) is True
+    monkeypatch.delenv("REPRO_CHECKS")
+    assert checks_enabled(True) is True
+
+
+# --------------------------------------------- hand-wired driver access
+def test_checks_available_on_handwired_driver(y):
+    # RunOptions.checks is run control, not solve()-only sugar
+    prob = Quad("nan")
+    bundle = prob.init_bundle((y,), None)
+    driver = IterativeDriver(
+        prob.full_step, bundle,
+        options=RunOptions(max_iter=8, tol=0.0, chunk=4, checks=True))
+    with pytest.raises(CheckError):
+        driver.run()
+
+
+# ------------------------------------------------------------ unit level
+def test_assert_costs_finite_honors_inf_seed_convention():
+    # +inf is the engine's not-yet-evaluated seed: allowed
+    assert_costs_finite(np.array([np.inf, 1.0, 0.5]), "t")
+    with pytest.raises(CheckError, match="NaN"):
+        assert_costs_finite(np.array([1.0, np.nan]), "t")
+    with pytest.raises(CheckError):
+        assert_costs_finite(np.array([-np.inf]), "t")
+
+
+def test_assert_all_finite_names_the_leaf():
+    tree = {"ok": jnp.ones(3), "bad": {"inner": jnp.array([1.0, np.inf])},
+            "ints": jnp.arange(3)}        # int leaves are skipped
+    with pytest.raises(CheckError, match="inner"):
+        assert_all_finite(tree, "t")
+    assert_all_finite({"a": jnp.ones(2)}, "t")
+
+
+# =====================================================================
+# REPRO_FORCE_INTERPRET (kernels/common.auto_interpret override)
+# =====================================================================
+
+def test_force_interpret_env_override(monkeypatch):
+    from repro.kernels.common import auto_interpret
+    backend_default = jax.default_backend() != "tpu"
+    monkeypatch.delenv("REPRO_FORCE_INTERPRET", raising=False)
+    assert auto_interpret() is backend_default
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    assert auto_interpret() is True
+    for val in ("0", "false", "no", ""):
+        monkeypatch.setenv("REPRO_FORCE_INTERPRET", val)
+        assert auto_interpret() is backend_default
+
+
+def test_force_interpret_kernels_still_correct(monkeypatch):
+    # forced interpreter mode must agree with the jnp oracle
+    from repro.kernels.dict_outer.ops import dict_outer
+    from repro.kernels.dict_outer.ref import dict_outer_ref
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    S = jax.random.normal(KEY, (96, 8))
+    W = jax.random.normal(jax.random.PRNGKey(8), (96, 6))
+    got = dict_outer(S, W, block_k=32)
+    want = dict_outer_ref(S, W)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,100 @@
+"""Checkpoint restore guards, both directions (DESIGN.md §15/§17).
+
+``tests/test_problem_api.py`` covers the scdl-written side (scdl
+checkpoint refused by deconvolve resume; scdl config change refused).
+This module closes the matrix: deconvolve-written checkpoints refuse an
+scdl resume, config-fingerprint changes are caught for *both*
+workloads in both drift directions, and run-control fields
+(``max_iter``/``tol``) stay out of the fingerprint for both.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.problem import solve
+from repro.data.synthetic import coupled_patches
+from repro.imaging import psf as psf_op
+from repro.imaging.condat import SolverConfig
+from repro.imaging.scdl import SCDLConfig
+
+
+@pytest.fixture(scope="module")
+def psf_data():
+    return psf_op.simulate(8, jax.random.PRNGKey(11))
+
+
+@pytest.fixture(scope="module")
+def scdl_data():
+    return coupled_patches(256, 25, 9, 16, seed=13)
+
+
+def _write_deconv_ckpt(tmp_path, psf_data, name):
+    d = tmp_path / name
+    solve("deconvolve", psf_data.Y, psf_data.psfs,
+          cfg=SolverConfig(mode="sparse", n_scales=3, max_iter=4),
+          chunk=4, tol=0, checkpoint_dir=d, checkpoint_every=4)
+    return d
+
+
+def test_deconvolve_checkpoint_refuses_scdl_resume(tmp_path, psf_data,
+                                                   scdl_data):
+    """Reverse of the existing scdl->deconvolve guard test: a
+    deconvolve checkpoint must refuse to restore into an scdl run."""
+    d = _write_deconv_ckpt(tmp_path, psf_data, "ckpt_rev_workload")
+    S_h, S_l = scdl_data
+    with pytest.raises(ValueError, match="meta"):
+        solve("scdl", S_h, S_l, cfg=SCDLConfig(n_atoms=16, max_iter=6),
+              chunk=4, tol=0, checkpoint_dir=d, resume=True)
+
+
+def test_deconvolve_config_change_refused_on_resume(tmp_path, psf_data):
+    """Config drift guard for the deconvolve workload (the existing
+    test only exercises scdl): resuming with a changed lam must fail."""
+    d = _write_deconv_ckpt(tmp_path, psf_data, "ckpt_deconv_cfg")
+    with pytest.raises(ValueError, match="meta"):
+        solve("deconvolve", psf_data.Y, psf_data.psfs,
+              cfg=SolverConfig(mode="sparse", n_scales=3, max_iter=8,
+                               lam=0.5),
+              chunk=4, tol=0, checkpoint_dir=d, resume=True)
+
+
+def test_deconvolve_run_control_change_accepted_on_resume(tmp_path,
+                                                          psf_data):
+    """max_iter/tol are run control, not step math: changing them on a
+    deconvolve resume is the continue-a-finished-run workflow and must
+    restore cleanly."""
+    d = _write_deconv_ckpt(tmp_path, psf_data, "ckpt_deconv_extend")
+    rest = solve("deconvolve", psf_data.Y, psf_data.psfs,
+                 cfg=SolverConfig(mode="sparse", n_scales=3, max_iter=8,
+                                  tol=1e-9),
+                 chunk=4, tol=0, checkpoint_dir=d, resume=True)
+    assert len(rest.log.costs) == 4        # iterations 4..8 only
+
+
+def test_scdl_config_change_refused_both_directions(tmp_path, scdl_data):
+    """The fingerprint must catch drift in either direction: a run
+    with the default lam refuses a lam=0.5 checkpoint just as a lam=0.5
+    run refuses a default-lam checkpoint (the existing test only checks
+    default -> changed)."""
+    S_h, S_l = scdl_data
+    d = tmp_path / "ckpt_scdl_rev"
+    solve("scdl", S_h, S_l,
+          cfg=SCDLConfig(n_atoms=16, max_iter=4, lam_h=0.5),
+          chunk=4, tol=0, checkpoint_dir=d, checkpoint_every=4)
+    with pytest.raises(ValueError, match="meta"):
+        solve("scdl", S_h, S_l, cfg=SCDLConfig(n_atoms=16, max_iter=8),
+              chunk=4, tol=0, checkpoint_dir=d, resume=True)
+
+
+def test_resumed_trajectory_continues_exactly(tmp_path, psf_data):
+    """Guard semantics end-to-end: an accepted resume continues the
+    exact cost trajectory of an uninterrupted run."""
+    cfg = SolverConfig(mode="sparse", n_scales=3, max_iter=8)
+    full = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                 chunk=4, tol=0)
+    d = _write_deconv_ckpt(tmp_path, psf_data, "ckpt_traj")
+    rest = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                 chunk=4, tol=0, checkpoint_dir=d, resume=True)
+    np.testing.assert_allclose(np.asarray(rest.log.costs),
+                               np.asarray(full.costs[4:]),
+                               rtol=1e-6, atol=0)
