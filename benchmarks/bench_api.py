@@ -69,6 +69,14 @@ def _run_solve_checks(data, cfg, iters, chunk):
     return sol.log
 
 
+def _run_solve_resilience(data, cfg, iters, chunk):
+    from repro.resilience import ResilienceConfig
+    sol = solve(DeconvolutionProblem(cfg, sigma_noise=data.sigma),
+                data.Y, data.psfs, max_iter=iters, tol=0, chunk=chunk,
+                resilience=ResilienceConfig())
+    return sol.log
+
+
 def run(n: int = 128, iters: int = 96, chunk: int = 8, reps: int = 3,
         tolerance: float = 0.02, smoke: bool = False) -> None:
     if smoke:
@@ -80,12 +88,15 @@ def run(n: int = 128, iters: int = 96, chunk: int = 8, reps: int = 3,
     data = psf_op.simulate(n, jax.random.PRNGKey(1))
     cfg = SolverConfig(mode="sparse", n_scales=3)
 
-    # solve_checks (runtime sanitizers on) is recorded but never gated:
-    # checks mode pays deliberate host syncs per chunk.  The ≤tolerance
-    # gate below runs on the checks-OFF solve, which is therefore also
-    # the regression guard for "checks=False adds zero dispatches".
+    # solve_checks (runtime sanitizers on) and solve_resilience
+    # (supervised execution, DESIGN.md §18) are recorded but never
+    # gated: both pay deliberate per-chunk host work (sync / snapshot
+    # spill).  The ≤tolerance gate below runs on the plain solve, which
+    # is therefore also the regression guard for "checks=False and
+    # resilience=None add zero dispatches".
     runners = {"handwired": _run_handwired, "solve": _run_solve,
-               "solve_checks": _run_solve_checks}
+               "solve_checks": _run_solve_checks,
+               "solve_resilience": _run_solve_resilience}
     # rotate run order each rep so every runner visits every position —
     # a plain reversal would pin the middle runner in place and leave
     # monotone host-load drift uncancelled for it
@@ -107,6 +118,8 @@ def run(n: int = 128, iters: int = 96, chunk: int = 8, reps: int = 3,
                                   np.asarray(costs["solve"]))
     np.testing.assert_array_equal(np.asarray(costs["handwired"]),
                                   np.asarray(costs["solve_checks"]))
+    np.testing.assert_array_equal(np.asarray(costs["handwired"]),
+                                  np.asarray(costs["solve_resilience"]))
 
     us = {k: float(np.median(v) * 1e6) for k, v in samples.items()}
     # gate on the median of per-rep paired ratios: each pair ran back to
@@ -114,7 +127,8 @@ def run(n: int = 128, iters: int = 96, chunk: int = 8, reps: int = 3,
     ratio = float(np.median([s / h for s, h in zip(rep_medians["solve"],
                                                    rep_medians["handwired"])]))
     records = []
-    for label in ("handwired", "solve", "solve_checks"):
+    for label in ("handwired", "solve", "solve_checks",
+                  "solve_resilience"):
         rec = {"name": f"api_dispatch/sparse_n{n}_chunk{chunk}_{label}",
                "us_per_iter": round(us[label], 1),
                "vs_handwired": round(us[label] / us["handwired"], 4),

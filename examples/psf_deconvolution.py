@@ -17,6 +17,27 @@ is checked anyway.  ``--per-iter-cost`` switches the observability grid
 back to every iteration.
 
     PYTHONPATH=src python examples/psf_deconvolution.py [--n 512]
+
+Surviving preemption (DESIGN.md §18).  On a preemptible TPU slice, add
+checkpointing + supervised execution and rerun the same command after
+an eviction — the trajectory continues exactly where it stopped, and
+transient in-run failures (worker loss, NaN divergence, torn
+checkpoint writes) are retried / rolled back instead of killing the
+run::
+
+    from repro.resilience import ResilienceConfig
+
+    sol = solve(DeconvolutionProblem(cfg), data.Y, data.psfs,
+                checkpoint_dir="ckpt/psf", checkpoint_every=24,
+                resume=True,                # picks the newest VALID step
+                resilience=ResilienceConfig(ring=2, max_retries=3))
+    print(sol.recovery)      # retries / rollbacks / restores ledger
+
+``resume=True`` falls back past a corrupt newest checkpoint (torn
+write during the eviction) with a warning; rollback uses the in-memory
+snapshot ring first and the checkpoint directory once the ring is dry.
+Fault plans for drills come from the ``REPRO_CHAOS`` env var, e.g.
+``REPRO_CHAOS="dispatch@1;carry_nan@2;seed=7"``.
 """
 import argparse
 

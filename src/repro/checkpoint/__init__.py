@@ -1,2 +1,7 @@
-from repro.checkpoint.checkpointer import (Checkpointer, latest_step,  # noqa
-                                           restore, save)
+from repro.checkpoint.checkpointer import (Checkpointer,  # noqa
+                                           CheckpointCorruptError,
+                                           CheckpointError,
+                                           CheckpointWriteError,
+                                           latest_step, latest_valid_step,
+                                           restore, save,
+                                           validate_checkpoint)

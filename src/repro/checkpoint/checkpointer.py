@@ -25,6 +25,13 @@ On a real multi-host pod each host would write only its addressable
 shards (process-local npy + a shard index in the manifest); single-host
 here, full arrays are written — the format keeps the per-leaf layout so
 the multi-host writer is a drop-in.
+
+Hardening (DESIGN.md §18): the manifest carries a crc32 per leaf,
+:func:`validate_checkpoint` re-checks files against it without
+deserialising the tree, and :func:`latest_valid_step` scans
+newest-to-oldest so a truncated/corrupted newest checkpoint (killed
+writer, chaos ``ckpt_corrupt`` fault) falls back to the previous
+retention entry instead of poisoning restore.
 """
 from __future__ import annotations
 
@@ -32,11 +39,26 @@ import json
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.resilience import chaos as _chaos
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint persistence failures."""
+
+
+class CheckpointWriteError(CheckpointError):
+    """A checkpoint write failed (surfaced from the async thread too)."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """An on-disk checkpoint failed integrity validation."""
 
 
 def _flatten(tree) -> tuple:
@@ -44,9 +66,19 @@ def _flatten(tree) -> tuple:
     return leaves, treedef
 
 
+def _crc32_file(path: Path) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(block, crc)
+    return crc
+
+
 def save(directory, step: int, tree, *, meta: Optional[dict] = None
          ) -> Path:
-    """Synchronous atomic checkpoint write."""
+    """Synchronous atomic checkpoint write (crc32 per leaf in the
+    manifest; chaos fault points ``ckpt_write`` / ``ckpt_corrupt``)."""
+    _chaos.maybe_raise("ckpt_write", step=step)
     directory = Path(directory)
     final = directory / f"step_{step:08d}"
     tmp = directory / f"step_{step:08d}.tmp"
@@ -64,24 +96,74 @@ def save(directory, step: int, tree, *, meta: Optional[dict] = None
     }
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
-        np.save(tmp / f"leaf_{i:06d}.npy", arr)
+        path = tmp / f"leaf_{i:06d}.npy"
+        np.save(path, arr)
         manifest["leaves"].append(
-            {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+            {"shape": list(arr.shape), "dtype": str(arr.dtype),
+             "crc32": _crc32_file(path)})
     (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # chaos: simulate a writer killed mid-flight — the damaged payload
+    # still gets renamed into place, exactly the hazard validation guards
+    _chaos.corrupt_checkpoint_files("ckpt_corrupt", tmp, step=step)
     if final.exists():
         shutil.rmtree(final)
     tmp.rename(final)
     return final
 
 
-def latest_step(directory) -> Optional[int]:
-    directory = Path(directory)
+def _saved_steps(directory: Path) -> List[int]:
     if not directory.exists():
-        return None
-    steps = [int(p.name.split("_")[1]) for p in directory.iterdir()
-             if p.is_dir() and p.name.startswith("step_")
-             and not p.name.endswith(".tmp")]
+        return []
+    return sorted(int(p.name.split("_")[1]) for p in directory.iterdir()
+                  if p.is_dir() and p.name.startswith("step_")
+                  and not p.name.endswith(".tmp"))
+
+
+def latest_step(directory) -> Optional[int]:
+    steps = _saved_steps(Path(directory))
     return max(steps) if steps else None
+
+
+def validate_checkpoint(directory, step: int) -> Optional[str]:
+    """Integrity check of one saved step without deserialising the tree.
+
+    Returns ``None`` when the checkpoint is intact, else a human-readable
+    reason: missing/unparseable manifest, missing leaf file, or a crc32
+    mismatch against the manifest (legacy manifests without checksums
+    only get the existence checks)."""
+    root = Path(directory) / f"step_{step:08d}"
+    mpath = root / "manifest.json"
+    if not mpath.exists():
+        return "manifest.json missing"
+    try:
+        manifest = json.loads(mpath.read_text())
+    except (json.JSONDecodeError, OSError) as e:
+        return f"manifest unreadable: {e}"
+    entries = manifest.get("leaves", [])
+    if manifest.get("n_leaves") != len(entries):
+        return (f"manifest lists {len(entries)} leaves, "
+                f"declares n_leaves={manifest.get('n_leaves')}")
+    for i, entry in enumerate(entries):
+        path = root / f"leaf_{i:06d}.npy"
+        if not path.exists():
+            return f"leaf {i} missing"
+        want = entry.get("crc32")
+        if want is not None and _crc32_file(path) != want:
+            return f"leaf {i} crc32 mismatch"
+    return None
+
+
+def latest_valid_step(directory) -> Tuple[Optional[int], List[int]]:
+    """Newest step that passes :func:`validate_checkpoint`, scanning
+    newest-to-oldest.  Returns ``(step_or_None, corrupt_steps_skipped)``
+    — the skipped list lets callers warn that the newest entry was
+    damaged and an older one is being used."""
+    skipped: List[int] = []
+    for step in reversed(_saved_steps(Path(directory))):
+        if validate_checkpoint(directory, step) is None:
+            return step, skipped
+        skipped.append(step)
+    return None, skipped
 
 
 def restore(directory, step: int, like, *, shardings=None,
@@ -92,6 +174,12 @@ def restore(directory, step: int, like, *, shardings=None,
     device-sharded differently).  ``shardings``: optional tree of
     NamedSharding to place leaves under (None = default device).
     """
+    reason = validate_checkpoint(directory, step)
+    if reason is not None:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} under {str(directory)!r} failed "
+            f"integrity validation ({reason}); run "
+            f"latest_valid_step() to locate an intact fallback")
     directory = Path(directory) / f"step_{step:08d}"
     manifest = json.loads((directory / "manifest.json").read_text())
     if expect_meta is not None and not expect_meta(manifest["meta"]):
@@ -114,7 +202,13 @@ def restore(directory, step: int, like, *, shardings=None,
 
 
 class Checkpointer:
-    """Async checkpoint manager with retention."""
+    """Async checkpoint manager with retention.
+
+    A failure on the background write thread must not vanish with the
+    thread: it is stashed and re-raised as :class:`CheckpointWriteError`
+    at the next synchronisation point — ``wait()``, the next ``save()``
+    / ``save_async()``, or ``close()`` — so the training loop learns
+    its checkpoint cadence is broken while it can still react."""
 
     def __init__(self, directory, *, keep: int = 3,
                  meta: Optional[dict] = None):
@@ -122,12 +216,27 @@ class Checkpointer:
         self.keep = keep
         self.meta = meta or {}
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.saved_steps: list = []
+
+    def _record_failure(self, exc: BaseException) -> None:
+        """Async-thread exception router: stash for re-raise at the
+        next synchronisation point (``classify``-compatible: the
+        surfaced ``CheckpointWriteError`` chains the original)."""
+        self._error = exc
+
+    def _raise_pending(self):
+        if self._error is not None:
+            exc, self._error = self._error, None
+            raise CheckpointWriteError(
+                f"async checkpoint write failed: "
+                f"{type(exc).__name__}: {exc}") from exc
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
 
     def save_async(self, step: int, tree):
         """Snapshot to host (blocking only for the copy), write in a
@@ -137,9 +246,12 @@ class Checkpointer:
             lambda x: np.asarray(jax.device_get(x)), tree)
 
         def _write():
-            save(self.directory, step, host_tree, meta=self.meta)
-            self.saved_steps.append(step)
-            self._gc()
+            try:
+                save(self.directory, step, host_tree, meta=self.meta)
+                self.saved_steps.append(step)
+                self._gc()
+            except BaseException as e:  # surfaces via _raise_pending
+                self._record_failure(e)
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -149,6 +261,10 @@ class Checkpointer:
         save(self.directory, step, tree, meta=self.meta)
         self.saved_steps.append(step)
         self._gc()
+
+    def close(self):
+        """Drain the writer thread and surface any pending failure."""
+        self.wait()
 
     def _gc(self):
         steps = sorted(

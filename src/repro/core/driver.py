@@ -33,6 +33,12 @@ from repro.core.bundle import Bundle
 from repro.core.engine import (init_cost_like, init_out_like,
                                make_chunk_cost_step, make_scan_step,
                                make_step)
+# dependency-light resilience pieces (chaos injectors are no-ops unless a
+# ChaosConfig is activated; the supervisor itself is imported lazily only
+# when RunOptions.resilience is set)
+from repro.resilience import chaos as _chaos
+from repro.resilience.errors import DivergenceError
+from repro.resilience.recovery import ResilienceConfig
 
 
 @dataclass(frozen=True)
@@ -68,6 +74,10 @@ class RunOptions:
     # by REPRO_CHECKS=1 when going through solve()).  Off by default:
     # the disabled path adds zero dispatches or host transfers.
     checks: bool = False
+    # supervised execution (repro.resilience, DESIGN.md §18): retry,
+    # divergence rollback, recovery report.  None = unsupervised; the
+    # disabled path adds zero dispatches or host transfers.
+    resilience: Optional[ResilienceConfig] = None
     # step wiring
     step_fn_light: Optional[Callable] = None
     step_fn_cost: Optional[Callable] = None
@@ -172,6 +182,9 @@ class IterativeDriver:
                     f"would silently ignore it)")
             self.cost_every = max(int(options.cost_every), 1)
         self.log = RunLog()
+        # RecoveryReport from the last supervised run (None when
+        # resilience is off or run() has not executed yet)
+        self.recovery = None
         self._compiled: Dict[int, Callable] = {}
 
     # ------------------------------------------------------ compilation
@@ -273,8 +286,11 @@ class IterativeDriver:
     def run(self, start_iter: int = 0) -> Bundle:
         if self.checks:
             self._assert_contracts(start_iter)
-        if self.chunk == 1:
+        if self.chunk == 1 and self.options.resilience is None:
             return self._run_per_step(start_iter)
+        # supervised runs always take the chunked loop: its chunk-boundary
+        # host sync is where snapshots, validation and rollback live, and
+        # make_scan_step(chunk=1) reproduces per-step semantics exactly
         return self._run_chunked(start_iter)
 
     @property
@@ -292,9 +308,29 @@ class IterativeDriver:
         anyway, so they use the plain path."""
         return self._per_chunk and self.chunk > 1
 
+    def _dispatch_chunk(self, data, rep, last, i: int, k: int):
+        """One fused-chunk dispatch + its host sync, as a unit the
+        resilience supervisor can retry (the ``dispatch`` chaos fault
+        point lives here, so injected failures tick per attempt)."""
+        _chaos.maybe_raise("dispatch", step=i)
+        if self._cost_per_chunk or self._skips_cost:
+            data, rep, last, trace = self._scan_step(k)(
+                data, rep, np.int32(i), last)
+        else:
+            data, rep, trace = self._scan_step(k)(data, rep, np.int32(i))
+        costs = trace["cost"] if isinstance(trace, dict) else trace
+        costs = np.asarray(jax.device_get(jax.block_until_ready(costs)))
+        return data, rep, last, costs
+
     def _run_chunked(self, start_iter: int) -> Bundle:
         data, rep = self.bundle.data, self.bundle.replicated
         last = self._last_init()
+        sup = None
+        if self.options.resilience is not None:
+            from repro.resilience.supervisor import Supervisor
+            sup = Supervisor(self.options.resilience, self.bundle,
+                             start_iter=start_iter,
+                             last_init=self._last_init)
         ema = None
         compiled_ks = set()
         i = start_iter
@@ -303,15 +339,26 @@ class IterativeDriver:
             first_call = k not in compiled_ks
             compiled_ks.add(k)
             t0 = time.perf_counter()
-            if self._cost_per_chunk or self._skips_cost:
-                data, rep, last, trace = self._scan_step(k)(
-                    data, rep, np.int32(i), last)
+            if sup is not None:
+                sup.begin_chunk(data, rep, last, i, len(self.log.costs))
+                try:
+                    data, rep, last, costs = sup.dispatch(
+                        self._dispatch_chunk, data, rep, last, i, k)
+                    if _chaos.is_active():  # silent-corruption injector
+                        data = _chaos.poison_tree("carry_nan", data,
+                                                  step=i)
+                    sup.validate(data, rep, costs, i + k - 1)
+                except DivergenceError as e:
+                    sup.report.wall_time_lost_s += \
+                        time.perf_counter() - t0
+                    data, rep, last, i = sup.rollback(e, self.log)
+                    ema = None  # timings across a rollback don't compare
+                    continue
             else:
-                data, rep, trace = self._scan_step(k)(data, rep,
-                                                      np.int32(i))
-            costs = trace["cost"] if isinstance(trace, dict) else trace
-            costs = np.asarray(jax.device_get(
-                jax.block_until_ready(costs)))
+                data, rep, last, costs = self._dispatch_chunk(
+                    data, rep, last, i, k)
+                if _chaos.is_active():
+                    data = _chaos.poison_tree("carry_nan", data, step=i)
             dt = time.perf_counter() - t0
             if self.checks:
                 _checks.assert_costs_finite(
@@ -341,6 +388,8 @@ class IterativeDriver:
             if self._converged():
                 self.log.converged_at = i - 1
                 break
+        if sup is not None:
+            self.recovery = sup.finalize()
         return self.bundle.with_data(data, replicated=rep)
 
     def _run_per_step(self, start_iter: int) -> Bundle:
@@ -348,6 +397,8 @@ class IterativeDriver:
         ema = None
         for i in range(start_iter, self.max_iter):
             t0 = time.perf_counter()
+            if _chaos.is_active():  # unsupervised: a fault kills the run
+                _chaos.maybe_raise("dispatch", step=i)
             if self._skips_cost and i % self.cost_every != 0:
                 # off the cost grid: run the objective-free step and
                 # carry the last evaluated cost forward
@@ -375,6 +426,8 @@ class IterativeDriver:
                 self.log.costs.append(cost_val)
                 if self.update_replicated is not None:
                     rep = self.update_replicated(rep, out)
+            if _chaos.is_active():
+                data = _chaos.poison_tree("carry_nan", data, step=i)
             # straggler watchdog: a step far beyond the EMA is logged and
             # (in multi-host deployment) triggers an early checkpoint
             if ema is not None and dt > self.straggler_factor * ema:

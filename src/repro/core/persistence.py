@@ -48,6 +48,13 @@ def _to_host(tree: Any) -> Any:
     return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
 
+def to_host(tree: Any) -> Any:
+    """Public host spill of an arbitrary pytree — the snapshot-ring
+    primitive of ``repro.resilience.supervisor`` (bit-exact: fp32 round-
+    trips through ``np.asarray``/``device_put`` unchanged)."""
+    return _to_host(tree)
+
+
 def spill(bundle: Bundle) -> Any:
     """MEMORY_AND_DISK eviction: pull the bundle to host buffers."""
     return _to_host(bundle.data)
@@ -71,6 +78,33 @@ def spill_bundle(bundle: Bundle) -> Any:
     SCDL, so a data-only spill could not resume them)."""
     return {"data": spill(bundle),
             "replicated": _to_host(bundle.replicated)}
+
+
+def readmit_replicated(bundle: Bundle, host_tree: Any) -> Any:
+    """Device-place a replicated host tree (broadcast state, carried
+    outputs) under the bundle's mesh — ``P()`` on every leaf."""
+    if bundle.mesh is None:
+        return jax.tree.map(jax.numpy.asarray, host_tree)
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    shard = NamedSharding(bundle.mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, shard), host_tree)
+
+
+def readmit_state(bundle: Bundle, host_state: Any) -> Any:
+    """Inverse of :func:`spill_bundle`: place a ``{"data", "replicated"}``
+    host tree back on the bundle's mesh (record-sharded data leaves,
+    replicated broadcast leaves).  The rollback/retry restore path of
+    ``repro.resilience.supervisor``."""
+    if bundle.mesh is None:
+        return jax.tree.map(jax.numpy.asarray, host_state)
+    from jax.sharding import NamedSharding
+    dshard = NamedSharding(bundle.mesh, bundle.record_spec())
+    return {
+        "data": jax.tree.map(lambda x: jax.device_put(x, dshard),
+                             host_state["data"]),
+        "replicated": readmit_replicated(bundle, host_state["replicated"]),
+    }
 
 
 def bundle_shardings(bundle: Bundle) -> Any:

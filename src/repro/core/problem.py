@@ -29,6 +29,7 @@ imaging import on the caller's side.
 from __future__ import annotations
 
 import importlib
+import warnings
 from dataclasses import dataclass, replace
 from typing import (Any, Callable, ClassVar, Dict, Optional, Tuple, Type,
                     Union)
@@ -38,6 +39,7 @@ import dataclasses
 from repro.core import checks, persistence
 from repro.core.bundle import Bundle, gather
 from repro.core.driver import IterativeDriver, RunLog, RunOptions
+from repro.resilience import chaos as _chaos
 
 # --------------------------------------------------------------------
 # The Problem declaration
@@ -129,12 +131,15 @@ class Problem:
 class Solution:
     """What ``solve()`` returns: the workload's primary result ``x``,
     secondary outputs ``aux``, the driver's convergence log, and the
-    final bundle (for chained solves / inspection)."""
+    final bundle (for chained solves / inspection).  ``recovery`` is
+    the resilience ledger (``repro.resilience.RecoveryReport``) of a
+    supervised run — ``None`` when resilience was off."""
     x: Any
     aux: Dict[str, Any]
     log: RunLog
     bundle: Bundle
     problem: Problem
+    recovery: Optional[Any] = None
 
     @property
     def costs(self):
@@ -201,7 +206,8 @@ def available() -> Tuple[str, ...]:
 
 _RUN_CONTROL_KEYS = ("max_iter", "tol", "chunk", "cost_every",
                      "cost_window", "straggler_factor",
-                     "checkpoint_every", "checkpoint_fn", "checks")
+                     "checkpoint_every", "checkpoint_fn", "checks",
+                     "resilience")
 
 
 def derive_options(problem: Problem, base: RunOptions) -> RunOptions:
@@ -345,6 +351,14 @@ def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
     if checks.checks_enabled(opts.checks) and not opts.checks:
         opts = replace(opts, checks=True)
 
+    if opts.resilience is not None:
+        # kernel degradations can happen while *building* the problem
+        # (e.g. operator-norm power iterations tracing the kernels), so
+        # the recovery report's baseline is taken here, not at the
+        # driver's Supervisor construction
+        from repro.kernels import common as _kcommon
+        kernel_baseline = len(_kcommon.kernel_fallbacks())
+
     bundle = problem.init_bundle(tuple(inputs), mesh)
     start_iter = 0
     writer = None
@@ -359,18 +373,38 @@ def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
                 "config": _config_fingerprint(problem)}
         if resume is not False:
             latest = ckpt.latest_step(checkpoint_dir)
-            step = (resume if isinstance(resume, int)
-                    and not isinstance(resume, bool) else latest)
-            if step is None:
-                raise ValueError(
-                    f"resume=True but no checkpoints found under "
-                    f"{checkpoint_dir!r} — wrong directory, or the "
-                    f"first checkpoint was never written")
-            if not (Path(checkpoint_dir) / f"step_{step:08d}"
-                    / "manifest.json").exists():
-                raise ValueError(
-                    f"no checkpoint for step {step} under "
-                    f"{checkpoint_dir!r} (latest saved step: {latest})")
+            if isinstance(resume, int) and not isinstance(resume, bool):
+                # an explicit step is a contract: never silently
+                # substitute another one — missing or corrupt is an error
+                step = resume
+                if not (Path(checkpoint_dir) / f"step_{step:08d}"
+                        / "manifest.json").exists():
+                    raise ValueError(
+                        f"no checkpoint for step {step} under "
+                        f"{checkpoint_dir!r} (latest saved step: "
+                        f"{latest})")
+            else:
+                if latest is None:
+                    raise ValueError(
+                        f"resume=True but no checkpoints found under "
+                        f"{checkpoint_dir!r} — wrong directory, or the "
+                        f"first checkpoint was never written")
+                # the newest checkpoint may be a torn write (writer
+                # killed mid-flight): restore the newest *valid* one
+                step, corrupt = ckpt.latest_valid_step(checkpoint_dir)
+                if step is None:
+                    raise ValueError(
+                        f"resume=True but every checkpoint under "
+                        f"{checkpoint_dir!r} failed integrity "
+                        f"validation (corrupt steps: {corrupt}); "
+                        f"latest saved step: {latest}")
+                if corrupt:
+                    warnings.warn(
+                        f"newest checkpoint(s) {corrupt} under "
+                        f"{checkpoint_dir!r} failed integrity "
+                        f"validation (torn write?); resuming from "
+                        f"step {step} instead", RuntimeWarning,
+                        stacklevel=2)
             # shape/tree template only — checkpointer.restore reads
             # leaf shapes and the treedef, never the values, so hand it
             # the device arrays rather than a host spill of the bundle;
@@ -411,11 +445,24 @@ def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
                 "checkpoint_every= without checkpoint_dir= (or a "
                 "custom checkpoint_fn) would silently write nothing")
 
+    if opts.resilience is not None and checkpoint_dir is not None \
+            and opts.resilience.checkpoint_dir is None:
+        # divergence rollback falls back to disk once the snapshot ring
+        # is dry — point it at this run's own checkpoint directory
+        opts = replace(opts, resilience=dataclasses.replace(
+            opts.resilience, checkpoint_dir=str(checkpoint_dir)))
+
     driver = IterativeDriver(problem.full_step, bundle,
                              options=derive_options(problem, opts))
-    out = driver.run(start_iter=start_iter)
+    # REPRO_CHAOS activates the fault plan for exactly this run (inert
+    # when unset or when a test already holds active_chaos())
+    with _chaos.maybe_from_env():
+        out = driver.run(start_iter=start_iter)
     if writer is not None:
         writer.wait()           # in-flight async writes land before
     x, aux = problem.finalize(out, driver.log)   # the run is "done"
+    if driver.recovery is not None:
+        events = _kcommon.kernel_fallbacks()[kernel_baseline:]
+        driver.recovery.kernel_fallbacks = [dict(e) for e in events]
     return Solution(x=x, aux=aux, log=driver.log, bundle=out,
-                    problem=problem)
+                    problem=problem, recovery=driver.recovery)

@@ -1,10 +1,24 @@
-"""Shared helpers for the Pallas kernel wrappers."""
+"""Shared helpers for the Pallas kernel wrappers.
+
+Besides the backend probe (:func:`auto_interpret`) and padding helper,
+this module owns **graceful kernel degradation** (DESIGN.md §18): every
+kernel family's public wrapper routes its implementation choice through
+:func:`degraded_call`, so a Pallas construction/lowering failure (or an
+injected ``kernel`` chaos fault) drops the family compiled → interpret
+→ ref *once per process*, with a recorded warning, instead of killing a
+survey-scale run over one miscompiling kernel.
+"""
 from __future__ import annotations
 
 import os
+import threading
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.resilience import chaos as _chaos
 
 
 def auto_interpret() -> bool:
@@ -35,3 +49,85 @@ def pad_leading(arrays, block: int):
         arrays = [jnp.concatenate(
             [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]) for a in arrays]
     return arrays, n + pad
+
+
+# ---------------------------------------------------------------------------
+# Graceful kernel degradation: compiled -> interpret -> ref, once per family.
+# ---------------------------------------------------------------------------
+
+# Per-family degradation level.  Absent = 0 (honour the caller's request);
+# 1 = force interpret mode; 2 = force the pure-jnp reference path.  The dict
+# is process-global on purpose: once a family's compiled kernel has failed,
+# every later call in the process (including other solves) skips straight to
+# the surviving level instead of re-failing per call.
+_DEGRADED: Dict[str, int] = {}
+_FALLBACK_EVENTS: List[dict] = []
+_LOCK = threading.Lock()
+
+_LEVEL_NAMES = ("compiled", "interpret", "ref")
+
+
+def kernel_fallbacks() -> Tuple[dict, ...]:
+    """Degradation events recorded so far (process lifetime), oldest
+    first.  ``Supervisor.finalize`` slices off the per-run suffix for
+    ``Solution.recovery``."""
+    return tuple(_FALLBACK_EVENTS)
+
+
+def reset_degradation() -> None:
+    """Forget all degradation state and events (test isolation)."""
+    with _LOCK:
+        _DEGRADED.clear()
+        _FALLBACK_EVENTS.clear()
+
+
+def _degrade(family: str, level: int, exc: BaseException) -> None:
+    with _LOCK:
+        if _DEGRADED.get(family, 0) < level:
+            _DEGRADED[family] = level
+            event = {"family": family,
+                     "to": _LEVEL_NAMES[level],
+                     "error": f"{type(exc).__name__}: {exc}"}
+            _FALLBACK_EVENTS.append(event)
+            warnings.warn(
+                f"kernel family {family!r} degraded to "
+                f"{_LEVEL_NAMES[level]} after "
+                f"{type(exc).__name__}: {exc}", RuntimeWarning,
+                stacklevel=3)
+
+
+def degraded_call(family: str, *, kernel: Callable[[bool], Any],
+                  ref: Callable[[], Any],
+                  requested_interpret: Optional[bool] = None) -> Any:
+    """Run a kernel family's implementation at the highest level that
+    still works: compiled Mosaic, then interpreter mode, then the pure
+    jnp reference — degrading the *family* (not the call) on the first
+    failure, with a recorded ``RuntimeWarning``.
+
+    ``kernel(interpret)`` must build-and-call the Pallas path;
+    ``ref()`` the reference path.  Only errors raised at Python level
+    are catchable — kernel *construction*/trace/lowering failures and
+    injected ``kernel`` chaos faults.  A Mosaic abort inside an already
+    compiled program surfaces at the dispatch host sync instead, where
+    the resilience supervisor's retry loop owns it (DESIGN.md §18).
+
+    ``requested_interpret=None`` defers to :func:`auto_interpret`;
+    explicit True counts as starting at the interpret level.
+    """
+    interpret = (auto_interpret() if requested_interpret is None
+                 else requested_interpret)
+    level = _DEGRADED.get(family, 0)
+    if level == 0 and not interpret:
+        try:
+            _chaos.maybe_raise("kernel", tag=family)
+            return kernel(False)
+        except Exception as e:  # degrade the family, not the run
+            _degrade(family, 1, e)
+            level = 1
+    if level <= 1:
+        try:
+            _chaos.maybe_raise("kernel", tag=family)
+            return kernel(True)
+        except Exception as e:  # last resort: the jnp reference
+            _degrade(family, 2, e)
+    return ref()

@@ -1,10 +1,14 @@
-"""Jitted public wrappers for the fused dictionary outer products.
+"""Public wrappers for the fused dictionary outer products.
 
 ``use_kernel=None`` auto-selects: the Pallas kernel where it compiles to
 Mosaic (TPU), the pure-jnp oracle elsewhere — on CPU/GPU hosts XLA's own
 GEMM fusion beats running the kernel through the interpreter inside the
 training scan.  Tests pass ``use_kernel=True`` to exercise the kernel in
 interpreter mode on any backend.
+
+The kernel path routes through ``kernels.common.degraded_call``, so a
+Pallas failure degrades the ``dict_outer`` family compiled → interpret
+→ ref once per process with a recorded warning (DESIGN.md §18).
 """
 from __future__ import annotations
 
@@ -12,29 +16,56 @@ from functools import partial
 
 import jax
 
-from repro.kernels.common import auto_interpret
+from repro.kernels.common import auto_interpret, degraded_call
 from repro.kernels.dict_outer.kernel import (dict_outer_fwd,
                                              dict_outer_pair_fwd)
 from repro.kernels.dict_outer.ref import dict_outer_pair_ref, dict_outer_ref
 
+FAMILY = "dict_outer"
 
-@partial(jax.jit, static_argnames=("use_kernel", "block_k", "interpret"))
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def _outer_kernel(S, W, *, block_k: int, interpret: bool):
+    return dict_outer_fwd(S, W, block_k=block_k, interpret=interpret)
+
+
+_outer_ref = jax.jit(dict_outer_ref)
+
+
 def dict_outer(S, W, *, use_kernel=None, block_k: int = 512,
                interpret=None):
     if use_kernel is None:
         use_kernel = not auto_interpret()
     if not use_kernel:
-        return dict_outer_ref(S, W)
-    return dict_outer_fwd(S, W, block_k=block_k, interpret=interpret)
+        return _outer_ref(S, W)
+    return degraded_call(
+        FAMILY,
+        kernel=lambda interp: _outer_kernel(S, W, block_k=block_k,
+                                            interpret=interp),
+        ref=lambda: _outer_ref(S, W),
+        requested_interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("use_kernel", "block_k", "interpret"))
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def _pair_kernel(Sh, Sl, Wh, Wl, *, block_k: int, interpret: bool):
+    return dict_outer_pair_fwd(Sh, Sl, Wh, Wl, block_k=block_k,
+                               interpret=interpret)
+
+
+_pair_ref = jax.jit(dict_outer_pair_ref)
+
+
 def dict_outer_pair(Sh, Sl, Wh, Wl, *, use_kernel=None,
                     block_k: int = 512, interpret=None):
     """One pass over the coupled pair: (Sh^T Wh, Sl^T Wl, phi_h, phi_l)."""
     if use_kernel is None:
         use_kernel = not auto_interpret()
     if not use_kernel:
-        return dict_outer_pair_ref(Sh, Sl, Wh, Wl)
-    return dict_outer_pair_fwd(Sh, Sl, Wh, Wl, block_k=block_k,
-                               interpret=interpret)
+        return _pair_ref(Sh, Sl, Wh, Wl)
+    return degraded_call(
+        FAMILY,
+        kernel=lambda interp: _pair_kernel(Sh, Sl, Wh, Wl,
+                                           block_k=block_k,
+                                           interpret=interp),
+        ref=lambda: _pair_ref(Sh, Sl, Wh, Wl),
+        requested_interpret=interpret)

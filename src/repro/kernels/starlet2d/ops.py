@@ -1,4 +1,4 @@
-"""Jitted public wrappers for the starlet-smoothing kernel, plus the full
+"""Public wrappers for the starlet-smoothing kernel, plus the full
 batched transforms built from it.
 
 ``forward`` / ``adjoint`` are the batched counterparts of
@@ -6,7 +6,11 @@ batched transforms built from it.
 (N, H, W) stamp stack at once — the layout the Condat solver's dual
 updates use every iteration.  The adjoint shares cumulative smoothing
 products across scales (Horner evaluation, 2J - 1 kernel launches
-instead of O(J^2))."""
+instead of O(J^2)).
+
+The kernel path routes through ``kernels.common.degraded_call``, so a
+Pallas failure degrades the ``starlet2d`` family compiled → interpret
+→ ref once per process with a recorded warning (DESIGN.md §18)."""
 from __future__ import annotations
 
 from functools import partial
@@ -14,17 +18,34 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import degraded_call
 from repro.kernels.starlet2d.kernel import smooth_fwd
 from repro.kernels.starlet2d.ref import smooth_ref
 
+FAMILY = "starlet2d"
 
-@partial(jax.jit, static_argnames=("scale", "use_kernel", "block_n",
-                                   "interpret"))
+
+@partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
+def _smooth_kernel(imgs, *, scale: int, block_n: int, interpret: bool):
+    return smooth_fwd(imgs, scale, block_n=block_n, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def _smooth_ref(imgs, *, scale: int):
+    return smooth_ref(imgs, scale)
+
+
 def smooth(imgs, *, scale: int, use_kernel: bool = True,
            block_n: int = 128, interpret=None):
     if not use_kernel:
-        return smooth_ref(imgs, scale)
-    return smooth_fwd(imgs, scale, block_n=block_n, interpret=interpret)
+        return _smooth_ref(imgs, scale=scale)
+    return degraded_call(
+        FAMILY,
+        kernel=lambda interp: _smooth_kernel(imgs, scale=scale,
+                                             block_n=block_n,
+                                             interpret=interp),
+        ref=lambda: _smooth_ref(imgs, scale=scale),
+        requested_interpret=interpret)
 
 
 def decompose(imgs, n_scales: int, **kw):

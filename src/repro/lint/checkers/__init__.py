@@ -2,7 +2,7 @@
 (each module calls :func:`repro.lint.core.register_checker` at import
 time); ``repro.lint.core`` imports it lazily before every run."""
 from repro.lint.checkers import (donation, dtypes, imports, pallas,
-                                 protocol, tracer)
+                                 protocol, resilience, tracer)
 
 __all__ = ["donation", "dtypes", "imports", "pallas", "protocol",
-           "tracer"]
+           "resilience", "tracer"]

@@ -1,0 +1,90 @@
+"""RPL701 swallowed-exception: recovery-path code must not silently
+swallow broad exceptions.
+
+In ``repro/{core,checkpoint,resilience}`` an ``except:`` /
+``except Exception:`` / ``except BaseException:`` handler that neither
+re-raises nor routes the exception through the resilience machinery
+turns a worker failure into silent state corruption — the exact
+failure mode the supervised solve loop exists to make loud (DESIGN.md
+§18).  Outside those packages broad handlers are left to review; inside
+them every caught exception must either propagate (``raise``) or reach
+a recognised router: the transient/fatal classifier or a
+record/surface hook (``classify``, ``record_fault``,
+``_record_failure``, ``_raise_pending``, ...).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.lint.core import Finding, ModuleSource, Rule, register_checker
+
+RPL701 = Rule("RPL701", "swallowed-exception",
+              "broad except clause swallows exceptions in recovery-path "
+              "code without re-raising or routing them")
+
+#: path fragments that put a module in scope (posix-normalised)
+_SCOPED = ("repro/core/", "repro/checkpoint/", "repro/resilience/")
+
+#: call targets that count as routing the exception into the resilience
+#: machinery (bare names or method attributes)
+_ROUTERS = frozenset({"classify", "classify_error", "record_fault",
+                      "record_failure", "_record_failure",
+                      "_raise_pending"})
+
+#: exception names whose handlers are considered overbroad
+_BROAD = frozenset({"Exception", "BaseException"})
+
+
+def _in_scope(mod: ModuleSource) -> bool:
+    return any(frag in mod.path.as_posix() for frag in _SCOPED)
+
+
+def _broad_name(handler: ast.ExceptHandler) -> str:
+    """The overbroad catch spelling, or '' when the handler is narrow."""
+    t = handler.type
+    if t is None:
+        return "bare except:"
+    names = t.elts if isinstance(t, ast.Tuple) else [t]
+    for n in names:
+        if isinstance(n, ast.Name) and n.id in _BROAD:
+            return f"except {n.id}"
+        if isinstance(n, ast.Attribute) and n.attr in _BROAD:
+            return f"except {n.attr}"
+    return ""
+
+
+def _handled(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body re-raises or calls a router."""
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = (fn.id if isinstance(fn, ast.Name)
+                    else fn.attr if isinstance(fn, ast.Attribute)
+                    else None)
+            if name in _ROUTERS:
+                return True
+    return False
+
+
+@register_checker("resilience", [RPL701])
+def check(mod: ModuleSource):
+    findings: List[Finding] = []
+    if not _in_scope(mod):
+        return findings
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        broad = _broad_name(node)
+        if not broad or _handled(node):
+            continue
+        findings.append(mod.finding(
+            RPL701, node,
+            f"{broad} swallows the exception — re-raise it or route it "
+            f"through the resilience error machinery "
+            f"(repro.resilience.errors.classify / record_fault / "
+            f"_record_failure); silent recovery-path failures corrupt "
+            f"state (DESIGN.md §18)"))
+    return findings

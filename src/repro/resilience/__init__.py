@@ -1,0 +1,27 @@
+"""Resilient solve: chaos harness, supervised recovery, error taxonomy.
+
+The "R" in the paper's Spark RDDs is resilience; this package is the
+jax_pallas answer (DESIGN.md §18):
+
+- :mod:`repro.resilience.chaos` — deterministic seeded fault injection
+  at named fault points (``ChaosConfig`` / ``REPRO_CHAOS``);
+- :mod:`repro.resilience.errors` — the transient/fatal/divergence
+  taxonomy (:func:`classify`);
+- :mod:`repro.resilience.recovery` — ``ResilienceConfig`` run control
+  and the ``RecoveryReport`` returned on ``Solution.recovery``;
+- :mod:`repro.resilience.supervisor` — the snapshot-ring / retry /
+  rollback engine the driver engages for
+  ``solve(..., resilience=ResilienceConfig(...))``.
+
+``supervisor`` is imported lazily by the driver (only when resilience
+is requested); everything re-exported here is dependency-light.
+"""
+from repro.resilience.chaos import ChaosConfig, active_chaos
+from repro.resilience.errors import (DivergenceError, InjectedFault,
+                                     ResilienceError, ResilienceExhausted,
+                                     classify)
+from repro.resilience.recovery import RecoveryReport, ResilienceConfig
+
+__all__ = ["ChaosConfig", "DivergenceError", "InjectedFault",
+           "RecoveryReport", "ResilienceConfig", "ResilienceError",
+           "ResilienceExhausted", "active_chaos", "classify"]

@@ -1,0 +1,291 @@
+"""Deterministic fault-injection harness (DESIGN.md §18).
+
+Spark earns its resilience story by killing executors in integration
+tests; this module is the jax_pallas analogue — every failure mode the
+supervised solve loop recovers from can be injected *deterministically*
+so the recovery path is a unit test, not a war story.
+
+Fault points (each injector is a no-op unless chaos is active, so the
+probes cost one module-global ``is None`` check on the hot path):
+
+==================  ==================================================
+``dispatch``        raise inside the driver's chunk dispatch (before
+                    the compiled step runs) — a lost worker / failed
+                    launch, classified transient
+``carry_nan``      poison one float leaf of the data carry with NaN
+                    after a chunk lands — divergence of the iterate
+``ckpt_write``      raise at the top of a checkpoint ``save()`` — a
+                    failed write (exercises async error surfacing)
+``ckpt_corrupt``    truncate a leaf file of a checkpoint *after* the
+                    manifest checksums are computed — a torn write
+                    that survives the atomic rename
+``kernel``          raise on a kernel family's compiled attempt inside
+                    ``kernels.common.degraded_call`` — a Pallas
+                    lowering failure (also addressable per family as
+                    ``kernel:<family>``)
+==================  ==================================================
+
+Each fault point keeps an invocation counter; a :class:`ChaosConfig`
+maps points to the 0-based invocation indices at which they fire (each
+index fires once — a retried dispatch advances the counter, so the
+retry sees a healthy call).  Leaf selection for poisoning and any
+jittered choices are drawn from one seeded generator, so a failing
+chaos run replays bit-for-bit from its spec string.
+
+Activation: ``with chaos.active_chaos(cfg): ...`` in tests, or the
+``REPRO_CHAOS`` environment variable (parsed once per ``solve()``), e.g.
+``REPRO_CHAOS="dispatch@1;carry_nan@0,2;seed=7"``.
+
+Run ``python -m repro.resilience.chaos --workload deconvolve`` for a
+self-contained chaos smoke: a seeded faulty solve with resilience on,
+dumping the recovery report as JSON (the CI chaos job's artifact).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.resilience.errors import InjectedFault
+
+ENV_VAR = "REPRO_CHAOS"
+
+#: the canonical fault-point names (``kernel:<family>`` also accepted)
+FAULT_POINTS = ("dispatch", "carry_nan", "ckpt_write", "ckpt_corrupt",
+                "kernel")
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded, declarative fault plan: ``faults`` maps a fault-point
+    name (optionally ``point:tag``) to the invocation indices at which
+    it fires."""
+    seed: int = 0
+    faults: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, spec: str) -> "ChaosConfig":
+        """Parse a ``REPRO_CHAOS`` spec: ``;``-separated tokens, each
+        ``point@i[,j...]``, a bare ``point`` (index 0), or ``seed=N``."""
+        seed = 0
+        faults: Dict[str, Tuple[int, ...]] = {}
+        for token in spec.split(";"):
+            token = token.strip()
+            if not token:
+                continue
+            if token.startswith("seed="):
+                seed = int(token[len("seed="):])
+                continue
+            point, _, idx = token.partition("@")
+            point = point.strip()
+            base = point.split(":", 1)[0]
+            if base not in FAULT_POINTS:
+                raise ValueError(
+                    f"unknown chaos fault point {point!r}; known points: "
+                    f"{FAULT_POINTS} (plus 'kernel:<family>')")
+            indices = (tuple(int(t) for t in idx.split(",") if t.strip())
+                       if idx else (0,))
+            faults[point] = tuple(sorted(set(
+                faults.get(point, ()) + indices)))
+        return cls(seed=seed, faults=faults)
+
+    @classmethod
+    def from_env(cls) -> Optional["ChaosConfig"]:
+        spec = os.environ.get(ENV_VAR, "").strip()
+        return cls.parse(spec) if spec else None
+
+
+class _ChaosState:
+    """One activation: per-point invocation counters + the seeded rng."""
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        self.counts: Dict[str, int] = {}
+        self.rng = np.random.default_rng(cfg.seed)
+        self.fired: list = []           # [(key, invocation index), ...]
+
+    def _tick(self, key: str) -> bool:
+        n = self.counts.get(key, 0)
+        self.counts[key] = n + 1
+        want = self.cfg.faults.get(key)
+        if want is not None and n in want:
+            self.fired.append((key, n))
+            return True
+        return False
+
+    def should_fire(self, point: str, tag: Optional[str] = None) -> bool:
+        hit = self._tick(point)
+        if tag is not None:
+            hit = self._tick(f"{point}:{tag}") or hit
+        return hit
+
+
+_STATE: Optional[_ChaosState] = None
+
+
+def is_active() -> bool:
+    return _STATE is not None
+
+
+@contextlib.contextmanager
+def active_chaos(cfg: Optional[ChaosConfig]) -> Iterator:
+    """Install ``cfg`` as the process-wide chaos plan for the block
+    (``None`` is a no-op context, so callers can pass through an absent
+    env config unconditionally)."""
+    global _STATE
+    if cfg is None:
+        yield None
+        return
+    prev = _STATE
+    _STATE = _ChaosState(cfg)
+    try:
+        yield _STATE
+    finally:
+        _STATE = prev
+
+
+def maybe_from_env() -> contextlib.AbstractContextManager:
+    """Activation context for the ``REPRO_CHAOS`` env var; inert when
+    the variable is unset or chaos is already active (an explicit
+    ``active_chaos`` wins over the environment)."""
+    if is_active():
+        return contextlib.nullcontext()
+    return active_chaos(ChaosConfig.from_env())
+
+
+# --------------------------------------------------------------------
+# Injectors (each a cheap no-op when chaos is inactive)
+# --------------------------------------------------------------------
+
+def maybe_raise(point: str, *, step: Optional[int] = None,
+                tag: Optional[str] = None) -> None:
+    """Raise :class:`InjectedFault` when ``point`` (or ``point:tag``)
+    is scheduled to fire at this invocation."""
+    st = _STATE
+    if st is None:
+        return
+    if st.should_fire(point, tag):
+        raise InjectedFault(point, step=step, tag=tag)
+
+
+def poison_tree(point: str, tree, *, step: Optional[int] = None):
+    """Overwrite one seeded element of one seeded float leaf of
+    ``tree`` with NaN when ``point`` fires — the injected analogue of a
+    numerically diverged iterate.  Returns ``tree`` (possibly poisoned);
+    identity when chaos is inactive or the point does not fire."""
+    st = _STATE
+    if st is None:
+        return tree
+    if not st.should_fire(point):
+        return tree
+    import jax
+    import jax.numpy as jnp
+    leaves, treedef = jax.tree.flatten(tree)
+    float_idx = [i for i, leaf in enumerate(leaves)
+                 if jnp.issubdtype(jnp.result_type(leaf), jnp.floating)]
+    if not float_idx:
+        return tree
+    pick = int(st.rng.choice(float_idx))
+    leaf = jnp.asarray(leaves[pick])
+    if leaf.ndim == 0:
+        leaves[pick] = jnp.full_like(leaf, jnp.nan)
+    else:
+        flat = leaf.reshape(-1)
+        pos = int(st.rng.integers(flat.shape[0]))
+        leaves[pick] = flat.at[pos].set(jnp.nan).reshape(leaf.shape)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def corrupt_checkpoint_files(point: str, directory, *,
+                             step: Optional[int] = None) -> bool:
+    """Truncate the first leaf file (or, leafless, the manifest) of a
+    just-written checkpoint directory to half its size when ``point``
+    fires — a torn write the restore-side validation must catch.
+    Returns whether a file was corrupted."""
+    st = _STATE
+    if st is None:
+        return False
+    if not st.should_fire(point):
+        return False
+    directory = Path(directory)
+    leaves = sorted(directory.glob("leaf_*.npy"))
+    target = leaves[0] if leaves else directory / "manifest.json"
+    if not target.exists():
+        return False
+    data = target.read_bytes()
+    target.write_bytes(data[: max(len(data) // 2, 1)])
+    return True
+
+
+# --------------------------------------------------------------------
+# Chaos smoke entry point (the CI chaos job)
+# --------------------------------------------------------------------
+
+def _main(argv=None) -> int:
+    """Seeded faulty solve with resilience on; dumps the recovery
+    report.  Chaos comes from ``REPRO_CHAOS`` (or ``--spec``)."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workload", default="deconvolve",
+                    choices=("deconvolve", "scdl"))
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--spec", default=None,
+                    help=f"chaos spec (default: ${ENV_VAR})")
+    ap.add_argument("--report", default=None,
+                    help="write the recovery report JSON here")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.core.problem import solve
+    # under ``python -m`` this file executes as ``__main__`` — activate
+    # chaos on the canonical module instance, the one the solve stack's
+    # injectors read, not on this alias
+    from repro.resilience import chaos as _canon
+    from repro.resilience.recovery import ResilienceConfig
+
+    cfg = (_canon.ChaosConfig.parse(args.spec) if args.spec is not None
+           else _canon.ChaosConfig.from_env())
+    if cfg is None:
+        cfg = _canon.ChaosConfig.parse("dispatch@1;carry_nan@2;seed=7")
+    with _canon.active_chaos(cfg) as state:
+        if args.workload == "deconvolve":
+            from repro.imaging import psf as psf_op
+            from repro.imaging.condat import SolverConfig
+            data = psf_op.simulate(args.n, jax.random.PRNGKey(0))
+            sol = solve("deconvolve", data.Y, data.psfs,
+                        cfg=SolverConfig(mode="sparse", n_scales=3),
+                        max_iter=args.iters, tol=0, chunk=args.chunk,
+                        resilience=ResilienceConfig())
+        else:
+            from repro.data.synthetic import coupled_patches
+            from repro.imaging.scdl import SCDLConfig
+            S_h, S_l = coupled_patches(256, 25, 9, 16, seed=0)
+            sol = solve("scdl", S_h, S_l,
+                        cfg=SCDLConfig(n_atoms=16, max_iter=args.iters),
+                        tol=0, chunk=args.chunk,
+                        resilience=ResilienceConfig())
+        fired = list(state.fired) if state is not None else []
+    report = sol.recovery.to_json() if sol.recovery is not None else {}
+    report["chaos"] = {"seed": cfg.seed,
+                       "faults": {k: list(v)
+                                  for k, v in cfg.faults.items()},
+                       "fired": [{"point": k, "invocation": n}
+                                 for k, n in fired]}
+    report["final_cost"] = float(sol.log.costs[-1])
+    print(json.dumps(report, indent=2))
+    if args.report:
+        Path(args.report).write_text(json.dumps(report, indent=2))
+    return 0
+
+
+if __name__ == "__main__":                        # pragma: no cover
+    raise SystemExit(_main())

@@ -1,0 +1,84 @@
+"""Error taxonomy for the supervised solve loop (DESIGN.md §18).
+
+Every exception that escapes a chunk dispatch is routed through
+:func:`classify` before the supervisor decides what to do with it:
+
+- ``"transient"`` — worth retrying from the last chunk-boundary
+  snapshot: injected chaos faults, host I/O errors, and runtime errors
+  whose message carries one of the retryable XLA/gRPC status markers
+  (a preempted worker, a flaky interconnect).  ``ResilienceConfig.
+  transient_types`` extends the set per run.
+- ``"fatal"`` — a programming or configuration error (shape mismatch,
+  unknown key, OOM): retrying replays the same failure, so the
+  supervisor re-raises immediately.
+
+Divergence (non-finite state/cost at a chunk-boundary host sync) is
+deliberately *neither*: it is raised as :class:`DivergenceError` and
+handled by rollback — re-running from a snapshot, optionally with a
+rescaled step — not by blind retry.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+
+class ResilienceError(RuntimeError):
+    """Base class for everything the resilience subsystem raises."""
+
+
+class InjectedFault(ResilienceError):
+    """A chaos-harness fault (``repro.resilience.chaos``): deterministic,
+    seeded, and always classified transient so the supervised loop's
+    recovery path is what gets exercised."""
+
+    def __init__(self, point: str, *, step: Optional[int] = None,
+                 tag: Optional[str] = None):
+        self.point = point
+        self.step = step
+        self.tag = tag
+        where = f" at step {step}" if step is not None else ""
+        what = f"{point}:{tag}" if tag else point
+        super().__init__(f"injected chaos fault '{what}'{where}")
+
+
+class DivergenceError(ResilienceError):
+    """Non-finite state or objective observed at a chunk-boundary host
+    sync — the iterate diverged (or a chaos injector poisoned it)."""
+
+    def __init__(self, message: str, *, step: Optional[int] = None):
+        self.step = step
+        super().__init__(message)
+
+
+class ResilienceExhausted(ResilienceError):
+    """Recovery budget spent: retries exceeded ``max_retries``, or
+    rollbacks exceeded ``max_rollbacks`` with no snapshot or valid
+    on-disk checkpoint left to fall back to."""
+
+
+#: exception types retried without further inspection
+_TRANSIENT_TYPES: Tuple[type, ...] = (InjectedFault, OSError,
+                                      TimeoutError, ConnectionError)
+
+#: substrings marking a retryable runtime failure (XLA / gRPC status
+#: codes surface in the exception message, not the exception type)
+_TRANSIENT_MARKERS: Tuple[str, ...] = ("UNAVAILABLE", "DEADLINE_EXCEEDED",
+                                       "DATA_LOSS", "ABORTED",
+                                       "connection reset")
+
+
+def classify(exc: BaseException, extra_transient: Tuple[type, ...] = ()
+             ) -> str:
+    """``"transient"`` (retry from snapshot) or ``"fatal"`` (re-raise).
+
+    Divergence and exhausted-budget errors are the supervisor's own
+    control flow and never retryable.
+    """
+    if isinstance(exc, (DivergenceError, ResilienceExhausted)):
+        return "fatal"
+    if isinstance(exc, _TRANSIENT_TYPES + tuple(extra_transient)):
+        return "transient"
+    msg = str(exc)
+    if any(marker in msg for marker in _TRANSIENT_MARKERS):
+        return "transient"
+    return "fatal"

@@ -1,0 +1,90 @@
+"""Resilience configuration + the recovery report (DESIGN.md §18).
+
+:class:`ResilienceConfig` is run control, passed as
+``solve(..., resilience=ResilienceConfig(...))`` and carried on
+``RunOptions``; :class:`RecoveryReport` is the run's resilience ledger,
+returned on ``Solution.recovery`` — what failed, what it cost, and how
+the run survived it.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Any, Callable, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ResilienceConfig:
+    """Supervised-execution policy for one run.
+
+    - ``max_retries`` — transient dispatch failures retried per chunk,
+      each after restoring the chunk-start snapshot (donated buffers
+      do not survive a failed dispatch) and an exponential backoff of
+      ``backoff_s * backoff_factor**attempt``, jittered by ``jitter``
+      (seeded — chaos replays are deterministic).
+    - ``ring`` — chunk-boundary snapshots kept in host memory (the
+      in-memory rollback source).  Divergence rollback consumes ring
+      entries newest-first; when the ring runs dry it falls back to
+      the newest *valid* on-disk checkpoint under ``checkpoint_dir``
+      (``solve()`` fills this in from its own ``checkpoint_dir=``).
+    - ``max_rollbacks`` — total divergence rollbacks before giving up
+      (:class:`~repro.resilience.errors.ResilienceExhausted`): a
+      deterministically diverging iterate must not loop forever.
+    - ``rollback_rescale(replicated, n_rollbacks) -> replicated`` —
+      optional step-size backoff applied to the broadcast state after
+      each rollback (e.g. shrink ``tau``/``sig``); ``None`` replays
+      the chunk unchanged (chaos-injected divergence is one-shot, so
+      the replay is clean).
+    - ``transient_types`` — extra exception types classified transient
+      on top of the built-in taxonomy (``resilience.errors``).
+    """
+    max_retries: int = 3
+    backoff_s: float = 0.02
+    backoff_factor: float = 2.0
+    jitter: float = 0.1
+    ring: int = 2
+    max_rollbacks: int = 8
+    rollback_rescale: Optional[Callable[[Any, int], Any]] = None
+    checkpoint_dir: Optional[str] = None
+    transient_types: Tuple[type, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.ring < 1:
+            raise ValueError(
+                "ResilienceConfig.ring must be >= 1: retry after a "
+                "failed (donating) dispatch needs at least the "
+                "chunk-start snapshot to restore from")
+
+
+@dataclass
+class RecoveryReport:
+    """What resilience did for one run: every fault seen, every retry
+    and rollback taken, every kernel-family degradation recorded, and
+    the wall time the failures cost (recovery machinery overhead —
+    snapshots, validation — is *not* counted as lost; only failed work
+    and its repair are)."""
+    retries: int = 0
+    rollbacks: int = 0
+    checkpoint_restores: int = 0
+    faults: List[dict] = field(default_factory=list)
+    kernel_fallbacks: List[dict] = field(default_factory=list)
+    wall_time_lost_s: float = 0.0
+
+    def record_fault(self, point: str, step, exc: BaseException) -> None:
+        self.faults.append({
+            "point": point,
+            "step": None if step is None else int(step),
+            "error": f"{type(exc).__name__}: {exc}"})
+
+    def to_json(self) -> dict:
+        out = asdict(self)
+        out["wall_time_lost_s"] = round(out["wall_time_lost_s"], 6)
+        return out
+
+    def __str__(self) -> str:
+        return (f"RecoveryReport(retries={self.retries}, "
+                f"rollbacks={self.rollbacks}, "
+                f"checkpoint_restores={self.checkpoint_restores}, "
+                f"faults={len(self.faults)}, "
+                f"kernel_fallbacks={len(self.kernel_fallbacks)}, "
+                f"wall_time_lost_s={self.wall_time_lost_s:.3f})")

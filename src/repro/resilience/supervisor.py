@@ -1,0 +1,199 @@
+"""The supervised chunk-execution loop's recovery engine.
+
+``IterativeDriver`` stays in charge of *what* to run; this module owns
+*what happens when it fails* (DESIGN.md §18):
+
+- :meth:`Supervisor.begin_chunk` spills the chunk-start carry
+  ``(data, replicated, last)`` to a host-memory ring — the rollback
+  source that makes retry-after-donation and divergence replay exact;
+- :meth:`Supervisor.dispatch` wraps one chunk dispatch in classify →
+  bounded retry with exponential backoff + seeded jitter, restoring the
+  chunk-start snapshot before every retry (a failed dispatch may have
+  consumed the donated input buffers);
+- :meth:`Supervisor.validate` turns a non-finite state/objective at the
+  chunk-boundary host sync into a
+  :class:`~repro.resilience.errors.DivergenceError`
+  (reusing the ``repro.core.checks`` guards);
+- :meth:`Supervisor.rollback` recovers from divergence: newest ring
+  entry first (consumed, so repeated divergence walks back in time),
+  then the newest *valid* on-disk checkpoint, with an optional
+  step-size backoff hook on the broadcast state.
+
+The driver only imports this module when ``RunOptions.resilience`` is
+set, so the disabled path stays import- and dispatch-free.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import checks as _checks
+from repro.core import persistence
+from repro.core.bundle import Bundle
+from repro.resilience.errors import (DivergenceError, ResilienceExhausted,
+                                     classify)
+from repro.resilience.recovery import RecoveryReport, ResilienceConfig
+
+
+@dataclass(frozen=True)
+class _Snapshot:
+    """Host copy of the full chunk-start carry plus the bookkeeping
+    needed to rewind the run log to this boundary."""
+    it: int                      # global iteration index of the boundary
+    n_logged: int                # len(log.costs) at the boundary
+    state: Any                   # {"data": ..., "replicated": ...} host
+    last: Any                    # carried-output slot (host) or None
+
+
+class Supervisor:
+    """Per-run recovery engine; one instance per ``IterativeDriver.run``."""
+
+    def __init__(self, cfg: ResilienceConfig, bundle: Bundle, *,
+                 start_iter: int = 0,
+                 last_init: Optional[Callable[[], Any]] = None):
+        self.cfg = cfg
+        self.bundle = bundle
+        self.start_iter = start_iter
+        self.last_init = last_init
+        self.report = RecoveryReport()
+        self.ring: deque = deque(maxlen=cfg.ring)
+        self.rng = np.random.default_rng(cfg.seed)
+        self._rollbacks_done = 0
+        self._last_restored_it: Optional[int] = None
+        from repro.kernels import common as _kcommon
+        self._kernel_baseline = len(_kcommon.kernel_fallbacks())
+
+    # ------------------------------------------------------- snapshots
+    def begin_chunk(self, data, rep, last, it: int, n_logged: int) -> None:
+        """Push the chunk-start carry onto the host-memory ring."""
+        state = persistence.spill_bundle(
+            self.bundle.with_data(data, replicated=rep))
+        host_last = (None if last is None
+                     else persistence.to_host(last))
+        self.ring.append(_Snapshot(it=it, n_logged=n_logged, state=state,
+                                   last=host_last))
+
+    def _readmit(self, snap: _Snapshot):
+        """Device-place a snapshot back under the bundle's shardings."""
+        state = persistence.readmit_state(self.bundle, snap.state)
+        last = (None if snap.last is None
+                else persistence.readmit_replicated(self.bundle,
+                                                    snap.last))
+        return state["data"], state["replicated"], last
+
+    # --------------------------------------------------------- dispatch
+    def dispatch(self, fn: Callable, data, rep, last, i: int, k: int):
+        """Run ``fn(data, rep, last, i, k)`` with classify → bounded
+        retry; every retry restores the chunk-start snapshot first."""
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                return fn(data, rep, last, i, k)
+            except Exception as e:
+                kind = classify(e, self.cfg.transient_types)
+                self.report.record_fault("dispatch", i, e)
+                self.report.wall_time_lost_s += time.perf_counter() - t0
+                if kind != "transient":
+                    raise
+                if attempt >= self.cfg.max_retries:
+                    raise ResilienceExhausted(
+                        f"chunk dispatch at iteration {i} still failing "
+                        f"after {attempt} retries: {e}") from e
+                t1 = time.perf_counter()
+                self.report.retries += 1
+                time.sleep(self._backoff(attempt))
+                data, rep, last = self._readmit(self.ring[-1])
+                self.report.wall_time_lost_s += time.perf_counter() - t1
+                attempt += 1
+
+    def _backoff(self, attempt: int) -> float:
+        base = self.cfg.backoff_s * self.cfg.backoff_factor ** attempt
+        return base * (1.0 + self.cfg.jitter
+                       * float(self.rng.uniform(-1.0, 1.0)))
+
+    # ------------------------------------------------------- divergence
+    def validate(self, data, rep, costs, it: int) -> None:
+        """Chunk-boundary divergence detection (host sync already paid):
+        non-finite objective or state raises ``DivergenceError``."""
+        try:
+            _checks.assert_costs_finite(
+                costs, f"resilience: chunk ending at iteration {it}")
+            _checks.assert_all_finite(
+                {"data": data, "replicated": rep},
+                f"resilience: state after iteration {it}")
+        except _checks.CheckError as e:
+            raise DivergenceError(str(e), step=it) from e
+
+    def rollback(self, err: DivergenceError, log) -> Tuple[Any, Any, Any,
+                                                           int]:
+        """Recover from divergence: restore the newest ring entry
+        (consumed) or, ring dry, the newest valid on-disk checkpoint;
+        rewind ``log`` to the restored boundary.  Returns the restored
+        ``(data, replicated, last, iteration)``."""
+        self.report.record_fault("divergence", err.step, err)
+        if self._rollbacks_done >= self.cfg.max_rollbacks:
+            raise ResilienceExhausted(
+                f"rollback budget ({self.cfg.max_rollbacks}) exhausted; "
+                f"latest divergence: {err}") from err
+        self._rollbacks_done += 1
+        self.report.rollbacks += 1
+        t0 = time.perf_counter()
+        # the replayed chunk re-pushed its start snapshot via
+        # begin_chunk; when that exact boundary already failed once (and
+        # no rescale hook changes the replay), restoring it again would
+        # loop on the same divergence — walk back to an older snapshot
+        if (self.ring and self.cfg.rollback_rescale is None
+                and self.ring[-1].it == self._last_restored_it):
+            self.ring.pop()
+        if self.ring:
+            snap = self.ring.pop()
+            data, rep, last = self._readmit(snap)
+            it, n_logged = snap.it, snap.n_logged
+        else:
+            data, rep, last, it, n_logged = self._restore_from_disk(err)
+        self._last_restored_it = it
+        del log.costs[n_logged:]
+        del log.times[n_logged:]
+        if self.cfg.rollback_rescale is not None:
+            rep = self.cfg.rollback_rescale(rep, self._rollbacks_done)
+        self.report.wall_time_lost_s += time.perf_counter() - t0
+        return data, rep, last, it
+
+    def _restore_from_disk(self, err: DivergenceError):
+        """Ring exhausted: restore the newest checkpoint that passes
+        integrity validation (``checkpoint.checkpointer``)."""
+        if self.cfg.checkpoint_dir is None:
+            raise ResilienceExhausted(
+                "snapshot ring exhausted and no checkpoint_dir to fall "
+                "back to; latest divergence: " + str(err)) from err
+        from repro.checkpoint import checkpointer as ckpt
+        step, _skipped = ckpt.latest_valid_step(self.cfg.checkpoint_dir)
+        if step is None:
+            raise ResilienceExhausted(
+                f"snapshot ring exhausted and no valid checkpoint under "
+                f"{self.cfg.checkpoint_dir!r}; latest divergence: {err}"
+            ) from err
+        like = {"data": self.bundle.data,
+                "replicated": self.bundle.replicated}
+        state, _ = ckpt.restore(
+            self.cfg.checkpoint_dir, step, like,
+            shardings=persistence.bundle_shardings(self.bundle))
+        self.report.checkpoint_restores += 1
+        last = self.last_init() if self.last_init is not None else None
+        n_logged = max(step - self.start_iter, 0)
+        return state["data"], state["replicated"], last, step, n_logged
+
+    # --------------------------------------------------------- wrap-up
+    def finalize(self) -> RecoveryReport:
+        """Fold the kernel-degradation events recorded during this run
+        into the report and return it."""
+        from repro.kernels import common as _kcommon
+        events = _kcommon.kernel_fallbacks()[self._kernel_baseline:]
+        self.report.kernel_fallbacks = [dict(e) for e in events]
+        return self.report

@@ -682,6 +682,90 @@ def test_suppression_only_hides_named_rule(tmp_path):
 
 
 # =====================================================================
+# RPL701 swallowed-exception
+# =====================================================================
+
+def test_rpl701_bare_except_pass_in_core(tmp_path):
+    found = _lint(tmp_path, """
+        def load(path):
+            try:
+                return open(path).read()
+            except:
+                pass
+    """, name="repro/core/loader.py")
+    hits = _only(found, "RPL701")
+    assert len(hits) == 1
+    assert hits[0].line == 5
+    assert "bare except" in hits[0].message
+
+
+def test_rpl701_broad_except_logged_only_in_checkpoint(tmp_path):
+    found = _lint(tmp_path, """
+        def write(step, tree):
+            try:
+                _do_write(step, tree)
+            except Exception as e:
+                print("checkpoint write failed:", e)
+    """, name="repro/checkpoint/writer.py")
+    hits = _only(found, "RPL701")
+    assert len(hits) == 1 and "except Exception" in hits[0].message
+
+
+def test_rpl701_broad_tuple_except_in_resilience(tmp_path):
+    found = _lint(tmp_path, """
+        def step(fn):
+            try:
+                return fn()
+            except (OSError, BaseException):
+                return None
+    """, name="repro/resilience/loop.py")
+    assert len(_only(found, "RPL701")) == 1
+
+
+def test_rpl701_reraise_and_router_are_clean(tmp_path):
+    found = _lint(tmp_path, """
+        from repro.resilience.errors import classify
+
+        def dispatch(self, fn):
+            try:
+                return fn()
+            except Exception as e:
+                if classify(e) != "transient":
+                    raise
+                self.retries += 1
+
+        def background(self, fn):
+            try:
+                fn()
+            except BaseException as e:
+                self._record_failure(e)
+    """, name="repro/core/supervised.py")
+    assert _only(found, "RPL701") == []
+
+
+def test_rpl701_narrow_except_is_clean(tmp_path):
+    found = _lint(tmp_path, """
+        def parse(text):
+            try:
+                return int(text)
+            except ValueError:
+                return None
+    """, name="repro/core/parse.py")
+    assert _only(found, "RPL701") == []
+
+
+def test_rpl701_out_of_scope_not_flagged(tmp_path):
+    found = _lint(tmp_path, """
+        def probe():
+            try:
+                return _compile()
+            except Exception:
+                return None
+    """, name="repro/kernels/probe.py")
+    assert _only(found, "RPL701") == []
+
+
+# =====================================================================
 # Registry / CLI / output contracts
 # =====================================================================
 
@@ -700,6 +784,7 @@ def test_rule_ids_stable():
         "RPL501": "problem-hooks",
         "RPL502": "problem-metadata",
         "RPL601": "noncanonical-import",
+        "RPL701": "swallowed-exception",
     }
 
 
