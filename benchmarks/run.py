@@ -17,7 +17,8 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="psf,scdl,memory,driver,api,deconv")
+    ap.add_argument("--only",
+                    default="psf,scdl,memory,driver,api,deconv,many")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     wanted = set(args.only.split(","))
@@ -44,6 +45,9 @@ def main() -> None:
         from benchmarks import bench_deconv
         _run(lambda: bench_deconv.run(smoke=args.smoke), "deconv",
              failures)
+    if "many" in wanted:
+        from benchmarks import bench_many
+        _run(lambda: bench_many.run(smoke=args.smoke), "many", failures)
     if failures:
         print(f"# FAILED tables: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,0 +1,238 @@
+"""Pad-and-bucket planning for batched multi-instance solves.
+
+Production traffic for the paper's architecture is thousands of small
+*independent* problem instances (galaxy stamps, scenes, patients), not
+one big one.  ``solve_many`` (repro.core.problem) amortizes fixed
+per-dispatch costs by stacking compatible instances into one leading
+batch axis and running the fused chunked engine across all of them at
+once.  This module owns the planning half of that path (DESIGN.md §19):
+
+- group instances whose *static* signature matches (same per-input
+  dtypes and non-record shape dims — one XLA program per group);
+- within a group, pad each instance's record axis up to a shared bucket
+  capacity, subject to a padding-waste budget (``waste_budget`` bounds
+  the fraction of padded rows per bucket, so a 5-record instance never
+  rides in a 4096-capacity bucket);
+- emit deterministic bucket keys (hash of problem config salt + static
+  signature + capacity + membership) so per-bucket checkpoint
+  directories are stable across runs and resumable.
+
+The module is deliberately a leaf: numpy + hashlib only, no repro
+imports, so the driver/engine/problem layers can all use it freely.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BatchAxes:
+    """A Problem's declaration of how its instances batch
+    (``Problem.batch_axes()``, DESIGN.md §19).
+
+    - ``record_axes``: which axis of each raw input is the record axis
+      (the one ``Bundle.validate`` treats as leading in the built
+      bundle).  A single int broadcasts over all inputs; a tuple gives
+      one entry per input, with ``None`` marking non-array inputs that
+      carry no records.
+    - ``pad_records=False`` opts a workload out of record padding:
+      instances then bucket only with *exact* record-count matches.
+      Declare this when the step couples records through reductions
+      whose floating-point grouping the workload is sensitive to (e.g.
+      SCDL's per-iteration Gram matrices over the sample axis).
+    - ``shared_in_batch``: top-level keys of the bundle's replicated
+      dict that are instance-independent (derived from config only,
+      e.g. the low-rank test matrix ``omega``) — stored once per bucket
+      and broadcast, instead of stacked per instance.
+    - ``instance_invariant``: constructor attributes read by
+      ``init_bundle`` that are *declared* identical across instances
+      (e.g. a shared noise level).  Consumed by lint rule RPL801, which
+      flags undeclared per-instance constructor state.
+    """
+    record_axes: Union[int, Tuple[Optional[int], ...]] = 0
+    pad_records: bool = True
+    shared_in_batch: Tuple[str, ...] = ()
+    instance_invariant: Tuple[str, ...] = ()
+
+    def axis_for(self, i: int) -> Optional[int]:
+        if isinstance(self.record_axes, tuple):
+            if i >= len(self.record_axes):
+                raise ValueError(
+                    f"BatchAxes.record_axes declares {len(self.record_axes)} "
+                    f"inputs but instance has more (input #{i})")
+            return self.record_axes[i]
+        return self.record_axes
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One planned bucket: a set of instances sharing an XLA program.
+
+    ``indices`` are positions into the original instance list (the
+    planner's output preserves a total assignment: every instance lands
+    in exactly one bucket).  ``records[j]`` is the true record count of
+    ``indices[j]``; all are padded to ``capacity`` at stacking time.
+    ``key`` is deterministic across runs for identical inputs — the
+    per-bucket checkpoint directory name hangs off it.
+    """
+    key: str
+    capacity: int
+    indices: Tuple[int, ...]
+    records: Tuple[int, ...]
+    signature: Tuple = field(repr=False, default=())
+
+    @property
+    def waste(self) -> float:
+        """Fraction of padded (dead) rows in the stacked bucket."""
+        total = self.capacity * len(self.indices)
+        return (total - sum(self.records)) / total if total else 0.0
+
+
+def _leaf_sig(x: Any, axis: Optional[int]) -> Tuple:
+    arr = np.asarray(x) if not hasattr(x, "shape") else x
+    shape = tuple(arr.shape)
+    dtype = str(arr.dtype)
+    if axis is None:
+        return (dtype, shape)
+    ax = axis % len(shape) if shape else 0
+    if not shape:
+        raise ValueError(
+            f"record axis {axis} declared for a scalar input")
+    masked = shape[:ax] + ("N",) + shape[ax + 1:]
+    return (dtype, masked)
+
+
+def instance_records(instance: Sequence, axes: BatchAxes) -> int:
+    """Record count of one instance; every input carrying a record axis
+    must agree."""
+    counts = []
+    for i, x in enumerate(instance):
+        ax = axes.axis_for(i)
+        if ax is None:
+            continue
+        arr = np.asarray(x) if not hasattr(x, "shape") else x
+        if not arr.shape:
+            raise ValueError(
+                f"input #{i}: record axis {ax} declared for a scalar")
+        counts.append(int(arr.shape[ax % len(arr.shape)]))
+    if not counts:
+        raise ValueError(
+            "instance declares no record axes — nothing to batch over")
+    if len(set(counts)) > 1:
+        raise ValueError(
+            f"instance inputs disagree on record count: {counts}")
+    return counts[0]
+
+
+def static_signature(instance: Sequence, axes: BatchAxes) -> Tuple:
+    """Hashable per-instance signature of everything that must be equal
+    for two instances to share one compiled program: per-input dtypes
+    and every shape dim except the (padded) record axis."""
+    return tuple(_leaf_sig(x, axes.axis_for(i))
+                 for i, x in enumerate(instance))
+
+
+def bucket_key(salt: str, signature: Tuple, capacity: int,
+               members: Sequence[Tuple[int, int]]) -> str:
+    """Deterministic 12-hex-digit bucket id.  ``members`` is the
+    ``(index, records)`` list; the key pins the exact membership so a
+    resumed run refuses a checkpoint written under a different plan."""
+    desc = f"{salt}|{signature!r}|cap={capacity}|{sorted(members)!r}"
+    return hashlib.sha1(desc.encode()).hexdigest()[:12]
+
+
+def plan_buckets(instances: Sequence[Sequence], axes: BatchAxes, *,
+                 waste_budget: float = 0.25,
+                 salt: str = "") -> List[Bucket]:
+    """Partition ``instances`` into buckets.
+
+    Greedy first-fit-decreasing within each static-signature group:
+    instances are placed largest-first, each into the first open bucket
+    whose capacity fits and whose post-placement padding fraction stays
+    within ``waste_budget``; otherwise a new bucket opens at the
+    instance's own record count.  ``waste_budget=0`` degenerates to
+    exact-size buckets.  With ``axes.pad_records`` False the record
+    count joins the signature, so only exact matches share a bucket.
+
+    The returned list is deterministically ordered (largest stacked
+    workload first) and covers every instance exactly once.
+    """
+    if not 0.0 <= waste_budget < 1.0:
+        raise ValueError(
+            f"waste_budget must be in [0, 1), got {waste_budget}")
+    groups = {}
+    for idx, inst in enumerate(instances):
+        n = instance_records(inst, axes)
+        sig = static_signature(inst, axes)
+        if not axes.pad_records:
+            sig = sig + (("records", n),)
+        groups.setdefault(sig, []).append((idx, n))
+
+    out: List[Bucket] = []
+    for sig in sorted(groups, key=repr):
+        members = sorted(groups[sig], key=lambda t: (-t[1], t[0]))
+        open_: List[dict] = []
+        for idx, n in members:
+            placed = False
+            for b in open_:
+                pad = sum(b["cap"] - m_n for _, m_n in b["items"])
+                pad += b["cap"] - n
+                if pad <= waste_budget * b["cap"] * (len(b["items"]) + 1):
+                    b["items"].append((idx, n))
+                    placed = True
+                    break
+            if not placed:
+                # descending order guarantees cap >= every later n
+                open_.append({"cap": n, "items": [(idx, n)]})
+        for b in open_:
+            items = sorted(b["items"])
+            out.append(Bucket(
+                key=bucket_key(salt, sig, b["cap"], items),
+                capacity=b["cap"],
+                indices=tuple(i for i, _ in items),
+                records=tuple(n for _, n in items),
+                signature=sig))
+    out.sort(key=lambda b: (-b.capacity * len(b.indices), b.key))
+    return out
+
+
+# --------------------------------------------------------------------
+# Stacking helpers (operate on already-built per-instance bundles)
+# --------------------------------------------------------------------
+
+def pad_tree_records(tree, capacity: int):
+    """Zero-pad the leading (record) axis of every leaf to ``capacity``.
+
+    Padding happens on the *built bundle*, never on the raw inputs:
+    derived replicated state (operator norms from shape-dependent power
+    iterations, step sizes) must match the unpadded single solve
+    bit-for-bit, and zero record rows are inert through every builtin
+    step (they convolve/threshold/accumulate to zero).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def pad(x):
+        x = jnp.asarray(x)
+        n = x.shape[0]
+        if n > capacity:
+            raise ValueError(
+                f"leaf has {n} records, exceeds bucket capacity "
+                f"{capacity}")
+        if n == capacity:
+            return x
+        width = [(0, capacity - n)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, width)
+
+    return jax.tree.map(pad, tree)
+
+
+def stack_trees(trees: Sequence):
+    """Stack per-instance pytrees along a new leading batch axis."""
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *trees)

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import time
 import warnings
+from collections import deque
 from dataclasses import dataclass, field, fields, replace
 from typing import Any, Callable, Dict, List, Optional, Union
 
@@ -29,16 +30,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import checks as _checks
+from repro.core import persistence as _persist
 from repro.core.bundle import Bundle
-from repro.core.engine import (init_cost_like, init_out_like,
-                               make_chunk_cost_step, make_scan_step,
-                               make_step)
+from repro.core.engine import (init_batched_cost_like,
+                               init_batched_out_like, init_cost_like,
+                               init_out_like, make_batched_chunk_cost_step,
+                               make_batched_scan_step, make_chunk_cost_step,
+                               make_scan_step, make_step)
 # dependency-light resilience pieces (chaos injectors are no-ops unless a
 # ChaosConfig is activated; the supervisor itself is imported lazily only
 # when RunOptions.resilience is set)
 from repro.resilience import chaos as _chaos
 from repro.resilience.errors import DivergenceError
-from repro.resilience.recovery import ResilienceConfig
+from repro.resilience.recovery import RecoveryReport, ResilienceConfig
 
 
 @dataclass(frozen=True)
@@ -85,10 +89,20 @@ class RunOptions:
     light_updates_replicated: bool = False
 
     def __post_init__(self):
-        if isinstance(self.cost_every, str) and self.cost_every != "chunk":
+        if isinstance(self.cost_every, str):
+            if self.cost_every != "chunk":
+                raise ValueError(
+                    f'cost_every must be a positive int or the string '
+                    f'"chunk", got {self.cost_every!r}')
+        elif int(self.cost_every) <= 0:
             raise ValueError(
                 f'cost_every must be a positive int or the string '
-                f'"chunk", got {self.cost_every!r}')
+                f'"chunk", got {self.cost_every!r} (0 or negative would '
+                f'never evaluate the objective)')
+        if int(self.chunk) <= 0:
+            raise ValueError(
+                f"chunk must be a positive int (iterations fused per "
+                f"dispatch), got {self.chunk!r}")
 
     def merged_with(self, **overrides) -> "RunOptions":
         """A copy with the non-None entries of ``overrides`` applied
@@ -106,6 +120,10 @@ class RunLog:
     times: List[float] = field(default_factory=list)
     straggler_steps: List[int] = field(default_factory=list)
     converged_at: Optional[int] = None
+    # iterations this instance actually advanced — for single solves
+    # that equals len(costs); for solve_many lanes frozen by the active
+    # mask it stops growing at convergence while the bucket runs on
+    iters_run: Optional[int] = None
 
     @property
     def total_seconds(self) -> float:
@@ -161,6 +179,12 @@ class IterativeDriver:
         # program that runs is the one that was asked for
         self.chunk = max(min(int(options.chunk),
                              max(int(options.max_iter), 1)), 1)
+        # same clamp for the checkpoint cadence (0 stays "disabled"): a
+        # cadence longer than the run would otherwise never fire, and the
+        # final state is exactly what a resume needs
+        if self.checkpoint_every:
+            self.checkpoint_every = min(int(self.checkpoint_every),
+                                        max(int(options.max_iter), 1))
         self._per_chunk = options.cost_every == "chunk"
         if self._per_chunk:
             # both halves of the per-chunk contract, or the driver would
@@ -444,3 +468,481 @@ class IterativeDriver:
                 self.log.converged_at = i
                 break
         return self.bundle.with_data(data, replicated=rep)
+
+
+# --------------------------------------------------------------------
+# Batched multi-instance execution (solve_many, DESIGN.md §19)
+# --------------------------------------------------------------------
+
+
+class BatchedDriver:
+    """Drive one *bucket* of stacked instances to per-instance
+    convergence.
+
+    Same knobs as :class:`IterativeDriver` (one ``RunOptions``), same
+    chunked loop — but the carry is the batched state ``{"d", "r"
+    [, "last"]}`` (every leaf leading with the instance axis B) plus a
+    bucket-shared replicated tree, and convergence/logging/early exit
+    are per instance:
+
+    - each instance gets its own :class:`RunLog` (costs, times,
+      ``converged_at``, ``iters_run``);
+    - a converged instance's lane freezes via the active mask
+      (``engine.freeze_where``) and stops accruing ``iters_run`` —
+      frozen lanes still occupy device FLOPs until re-compaction;
+    - when the active fraction drops below ``recompact_below`` the
+      bucket re-compacts: retired lanes spill to host, live lanes
+      re-stack into a smaller program (the jitted step retraces once
+      per distinct batch size — at most ``log2(B)`` recompiles);
+    - checkpoints always use the *full-bucket* layout
+      (:meth:`snapshot_payload` scatters the compacted state + retired
+      spills back to B0 rows), so restore is independent of when
+      compaction happened;
+    - ``RunOptions.resilience`` wraps each dispatch in the same
+      classify → bounded-retry → ring-then-disk rollback discipline as
+      the single-instance ``Supervisor``, with snapshots extended to
+      the batch bookkeeping (:class:`_BatchSupervisor`).
+
+    ``orig_indices`` maps each stacked row to its position in the
+    caller's instance list; ``-1`` marks mesh-alignment filler lanes
+    (duplicated data, inactive from the start, never reported).
+    """
+
+    def __init__(self, step_fn: Callable, bundle: Bundle, *,
+                 options: Optional[RunOptions] = None,
+                 orig_indices=None, recompact_below: float = 0.5):
+        self.options = options = options or RunOptions()
+        self.step_fn = step_fn
+        self.step_fn_light = options.step_fn_light
+        self.step_fn_cost = options.step_fn_cost
+        self.update_replicated = options.update_replicated
+        self.light_updates_replicated = options.light_updates_replicated
+        self.max_iter = options.max_iter
+        self.tol = options.tol
+        self.cost_window = options.cost_window
+        self.checkpoint_fn = options.checkpoint_fn
+        self.checks = options.checks
+        self.chunk = max(min(int(options.chunk),
+                             max(int(options.max_iter), 1)), 1)
+        self.checkpoint_every = options.checkpoint_every
+        if self.checkpoint_every:
+            self.checkpoint_every = min(int(self.checkpoint_every),
+                                        max(int(options.max_iter), 1))
+        self._per_chunk = options.cost_every == "chunk"
+        if self._per_chunk:
+            if options.step_fn_cost is None or options.step_fn_light is None:
+                raise ValueError(
+                    'cost_every="chunk" requires step_fn_cost AND '
+                    "step_fn_light (see IterativeDriver)")
+            self.cost_every = 1
+        else:
+            if options.step_fn_cost is not None:
+                raise ValueError(
+                    "step_fn_cost is only consumed by the per-chunk "
+                    'objective mode — pass cost_every="chunk" with it')
+            self.cost_every = max(int(options.cost_every), 1)
+        self.recompact_below = float(recompact_below)
+
+        state = dict(bundle.data)
+        if set(state) != {"d", "r"}:
+            raise ValueError(
+                f'BatchedDriver expects bundle.data == {{"d", "r"}} '
+                f"(batched data + batched replicated), got "
+                f"{sorted(state)}")
+        B = jax.tree.leaves(state["d"])[0].shape[0]
+        if self._cost_per_chunk:
+            state["last"] = init_batched_cost_like(
+                self.step_fn_cost, state, bundle.replicated)
+        elif self._skips_cost:
+            state["last"] = init_batched_out_like(
+                self.step_fn, state, bundle.replicated)
+        self.bundle = bundle.with_data(state)
+        self.state = state
+        self.B0 = B
+        self.orig = (np.asarray(orig_indices, dtype=np.int64)
+                     if orig_indices is not None
+                     else np.arange(B, dtype=np.int64))
+        if len(self.orig) != B:
+            raise ValueError(
+                f"orig_indices has {len(self.orig)} entries for a "
+                f"batch of {B}")
+        # bookkeeping lives in full-layout row space [0, B0); ``slots``
+        # maps the current compacted position s -> row slots[s]
+        self.slots = np.arange(B, dtype=np.int64)
+        self.active = self.orig >= 0
+        self.iters_run = np.zeros(B, np.int64)
+        self.converged_at = np.full(B, -1, np.int64)
+        self.logs = [RunLog(iters_run=0) for _ in range(B)]
+        self.retired: Dict[int, Any] = {}    # row -> host instance state
+        self.recovery = None
+        self._iters_at_start = self.iters_run.copy()
+        self._compiled: Dict[int, Callable] = {}
+
+    # ------------------------------------------------------ compilation
+    @property
+    def _skips_cost(self) -> bool:
+        return self.cost_every > 1 and self.step_fn_light is not None
+
+    @property
+    def _cost_per_chunk(self) -> bool:
+        return self._per_chunk and self.chunk > 1
+
+    def _scan_step(self, k: int) -> Callable:
+        """Batched fused step, compiled once per chunk length; batch-
+        size changes from re-compaction retrace inside the same jit."""
+        if k not in self._compiled:
+            if self._cost_per_chunk:
+                self._compiled[k] = make_batched_chunk_cost_step(
+                    self.step_fn_light, self.step_fn_cost, self.bundle,
+                    self.state, chunk=k,
+                    update_replicated=self.update_replicated)
+            else:
+                self._compiled[k] = make_batched_scan_step(
+                    self.step_fn, self.bundle, self.state, chunk=k,
+                    update_replicated=self.update_replicated,
+                    fn_light=self.step_fn_light,
+                    cost_every=self.cost_every,
+                    light_updates_replicated=self.light_updates_replicated)
+        return self._compiled[k]
+
+    # ------------------------------------------------------ convergence
+    def _converged_log(self, log: RunLog) -> bool:
+        if not self.tol:
+            return False
+        c = log.costs
+        stride = (self.chunk if self._cost_per_chunk
+                  else self.cost_every if self._skips_cost else 1)
+        w = self.cost_window * stride
+        if len(c) <= w:
+            return False
+        prev, cur = c[-w - 1], c[-1]
+        return abs(prev - cur) <= self.tol * max(abs(prev), 1e-12)
+
+    # -------------------------------------------------------- dispatch
+    def _dispatch_chunk(self, state, mask, i: int, k: int):
+        _chaos.maybe_raise("dispatch", step=i)
+        state, trace = self._scan_step(k)(
+            state, self.bundle.replicated, mask, np.int32(i))
+        costs = trace["cost"] if isinstance(trace, dict) else trace
+        costs = np.asarray(jax.device_get(jax.block_until_ready(costs)))
+        return state, costs                      # costs: (k, B_current)
+
+    def _log_chunk(self, costs, dt: float, i: int, k: int) -> None:
+        per = dt / max(k, 1)
+        for s, row in enumerate(self.slots):
+            row = int(row)
+            if not self.active[row]:
+                continue
+            log = self.logs[row]
+            log.costs.extend(float(c) for c in costs[:, s])
+            log.times.extend([per] * k)
+            self.iters_run[row] += k
+            log.iters_run = int(self.iters_run[row])
+            if self._converged_log(log):
+                self.active[row] = False
+                self.converged_at[row] = i + k - 1
+                log.converged_at = i + k - 1
+
+    # ---------------------------------------------------- re-compaction
+    def _maybe_recompact(self) -> None:
+        cur = self.active[self.slots]
+        n_act = int(cur.sum())
+        B = len(self.slots)
+        if n_act == 0 or n_act >= self.recompact_below * B:
+            return
+        keep = np.flatnonzero(cur)
+        parts = max(self.bundle.n_partitions, 1)
+        if parts > 1:
+            need = (-len(keep)) % parts
+            if need:
+                # keep some frozen lanes as filler so the batch axis
+                # stays divisible across the mesh
+                frozen = np.flatnonzero(~cur)[:need]
+                keep = np.sort(np.concatenate([keep, frozen]))
+        if len(keep) == B:
+            return
+        host = _persist.to_host(self.state)
+        keep_set = set(keep.tolist())
+        for s in range(B):
+            if s not in keep_set:
+                self.retired[int(self.slots[s])] = jax.tree.map(
+                    lambda x, _s=s: x[_s], host)
+        compact = jax.tree.map(lambda x: x[keep], host)
+        self.state = _persist.readmit_batched(self.bundle, compact)
+        self.bundle = self.bundle.with_data(self.state)
+        self.slots = self.slots[keep]
+
+    # ------------------------------------------------------ checkpoints
+    def payload_template(self) -> Dict[str, Any]:
+        """Shape/tree template of :meth:`snapshot_payload` — hand it to
+        ``checkpoint.checkpointer.restore`` as ``like``.  The state side
+        is always the full B0-row layout, so the template is independent
+        of the current compaction."""
+        full = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                (self.B0,) + tuple(x.shape[1:]), x.dtype), self.state)
+        return {"state": full,
+                "batch": {"active": np.zeros(self.B0, bool),
+                          "iters_run": np.zeros(self.B0, np.int64),
+                          "converged_at": np.zeros(self.B0, np.int64)}}
+
+    def snapshot_payload(self) -> Dict[str, Any]:
+        """Full-bucket checkpoint payload: the compacted device state
+        scattered back to B0 rows, retired host spills filled in, plus
+        the per-instance bookkeeping arrays."""
+        host = _persist.to_host(self.state)
+        full = _persist.scatter_batched(host, self.slots, self.B0)
+        for row, inst in self.retired.items():
+            _persist.set_instance(full, row, inst)
+        return {"state": full,
+                "batch": {"active": self.active.copy(),
+                          "iters_run": self.iters_run.copy(),
+                          "converged_at": self.converged_at.copy()}}
+
+    def load_payload(self, payload, *, rewind_logs: bool = False) -> None:
+        """Adopt a full-layout payload: resume (fresh logs from the
+        restored boundary, mirroring single-instance resume) or mid-run
+        disk rollback (``rewind_logs=True`` truncates each lane's log to
+        the iterations it had logged at the checkpoint)."""
+        batch = payload["batch"]
+        iters = np.asarray(jax.device_get(batch["iters_run"]),
+                           dtype=np.int64)
+        conv = np.asarray(jax.device_get(batch["converged_at"]),
+                          dtype=np.int64)
+        act = np.asarray(jax.device_get(batch["active"])).astype(bool)
+        if rewind_logs:
+            base = self._iters_at_start
+            for row in range(self.B0):
+                n = int(max(iters[row] - base[row], 0))
+                log = self.logs[row]
+                del log.costs[n:]
+                del log.times[n:]
+                log.iters_run = int(iters[row])
+                log.converged_at = (int(conv[row]) if conv[row] >= 0
+                                    else None)
+        else:
+            self.logs = [RunLog(iters_run=int(iters[r]),
+                                converged_at=(int(conv[r])
+                                              if conv[r] >= 0 else None))
+                         for r in range(self.B0)]
+        self.active, self.iters_run, self.converged_at = act, iters, conv
+        self.slots = np.arange(self.B0, dtype=np.int64)
+        self.retired = {}
+        self.state = _persist.readmit_batched(self.bundle,
+                                              payload["state"])
+        self.bundle = self.bundle.with_data(self.state)
+
+    # ---------------------------------------------------------- results
+    def host_states(self) -> Dict[int, Any]:
+        """Per-row final instance states (host): current lanes sliced
+        out of the device state, retired lanes from their spills."""
+        host = _persist.to_host(self.state)
+        out = dict(self.retired)
+        for s, row in enumerate(self.slots):
+            out[int(row)] = jax.tree.map(lambda x, _s=s: x[_s], host)
+        return out
+
+    # ------------------------------------------------------------- run
+    def run(self, start_iter: int = 0) -> "BatchedDriver":
+        self._iters_at_start = self.iters_run.copy()
+        sup = None
+        if self.options.resilience is not None:
+            sup = _BatchSupervisor(self.options.resilience, self)
+        i = start_iter
+        while i < self.max_iter and bool(self.active.any()):
+            k = min(self.chunk, self.max_iter - i)
+            mask = jnp.asarray(self.active[self.slots])
+            t0 = time.perf_counter()
+            if sup is not None:
+                sup.begin_chunk(i)
+                try:
+                    state, costs = sup.dispatch(
+                        self._dispatch_chunk, self.state, mask, i, k)
+                    if _chaos.is_active():
+                        state = dict(state, d=_chaos.poison_tree(
+                            "carry_nan", state["d"], step=i))
+                    sup.validate(state, costs, i + k - 1)
+                except DivergenceError as e:
+                    sup.report.wall_time_lost_s += \
+                        time.perf_counter() - t0
+                    i = sup.rollback(e)
+                    continue
+            else:
+                state, costs = self._dispatch_chunk(
+                    self.state, mask, i, k)
+                if _chaos.is_active():
+                    state = dict(state, d=_chaos.poison_tree(
+                        "carry_nan", state["d"], step=i))
+            self.state = state
+            self.bundle = self.bundle.with_data(state)
+            dt = time.perf_counter() - t0
+            if self.checks:
+                _checks.assert_costs_finite(
+                    costs, f"bucket chunk ending at iteration {i + k - 1}")
+                _checks.assert_all_finite(
+                    {"data": state["d"], "replicated": state["r"]},
+                    f"bucket state after iteration {i + k - 1}")
+            self._log_chunk(costs, dt, i, k)
+            if (self.checkpoint_every and self.checkpoint_fn is not None
+                    and (i + k) // self.checkpoint_every
+                    > i // self.checkpoint_every):
+                self.checkpoint_fn(self.snapshot_payload(), i + k - 1)
+            i += k
+            self._maybe_recompact()
+        if sup is not None:
+            self.recovery = sup.finalize()
+        return self
+
+
+class _BatchSupervisor:
+    """Retry/rollback supervision for one solve_many bucket.
+
+    The single-instance ``Supervisor`` snapshots ``(data, rep, last)``
+    and rewinds one RunLog; a bucket's recovery state additionally
+    spans the active mask, per-instance counters and logs, the slot
+    map, and the retired spills — so the batched driver carries its own
+    snapshot ring with the same classify → bounded-retry →
+    ring-then-disk rollback discipline (DESIGN.md §18/§19).  Disk
+    fallback restores the full-bucket checkpoint layout written by
+    :meth:`BatchedDriver.snapshot_payload`.
+    """
+
+    def __init__(self, cfg: ResilienceConfig, driver: BatchedDriver):
+        from repro.kernels import common as _kcommon
+        self.cfg = cfg
+        self.driver = driver
+        self.report = RecoveryReport()
+        self.ring: deque = deque(maxlen=cfg.ring)
+        self.rng = np.random.default_rng(cfg.seed)
+        self._rollbacks_done = 0
+        self._last_restored_it: Optional[int] = None
+        self._kernel_baseline = len(_kcommon.kernel_fallbacks())
+
+    # ------------------------------------------------------- snapshots
+    def begin_chunk(self, it: int) -> None:
+        d = self.driver
+        self.ring.append({
+            "it": it,
+            "state": _persist.to_host(d.state),
+            "slots": d.slots.copy(), "active": d.active.copy(),
+            "iters": d.iters_run.copy(), "conv": d.converged_at.copy(),
+            "logs_len": [len(log.costs) for log in d.logs],
+            "retired": dict(d.retired)})
+
+    def _restore(self, snap) -> int:
+        d = self.driver
+        d.slots = snap["slots"].copy()
+        d.active = snap["active"].copy()
+        d.iters_run = snap["iters"].copy()
+        d.converged_at = snap["conv"].copy()
+        d.retired = dict(snap["retired"])
+        for row in range(d.B0):
+            log = d.logs[row]
+            n = snap["logs_len"][row]
+            del log.costs[n:]
+            del log.times[n:]
+            log.iters_run = int(d.iters_run[row])
+            log.converged_at = (int(d.converged_at[row])
+                                if d.converged_at[row] >= 0 else None)
+        d.state = _persist.readmit_batched(d.bundle, snap["state"])
+        d.bundle = d.bundle.with_data(d.state)
+        return snap["it"]
+
+    # --------------------------------------------------------- dispatch
+    def dispatch(self, fn: Callable, state, mask, i: int, k: int):
+        from repro.resilience.errors import ResilienceExhausted, classify
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                return fn(state, mask, i, k)
+            except Exception as e:
+                kind = classify(e, self.cfg.transient_types)
+                self.report.record_fault("dispatch", i, e)
+                self.report.wall_time_lost_s += time.perf_counter() - t0
+                if kind != "transient":
+                    raise
+                if attempt >= self.cfg.max_retries:
+                    raise ResilienceExhausted(
+                        f"bucket chunk dispatch at iteration {i} still "
+                        f"failing after {attempt} retries: {e}") from e
+                t1 = time.perf_counter()
+                self.report.retries += 1
+                time.sleep(self._backoff(attempt))
+                # the failed call may have consumed the donated state
+                state = _persist.readmit_batched(
+                    self.driver.bundle, self.ring[-1]["state"])
+                self.report.wall_time_lost_s += time.perf_counter() - t1
+                attempt += 1
+
+    def _backoff(self, attempt: int) -> float:
+        base = self.cfg.backoff_s * self.cfg.backoff_factor ** attempt
+        return base * (1.0 + self.cfg.jitter
+                       * float(self.rng.uniform(-1.0, 1.0)))
+
+    # ------------------------------------------------------- divergence
+    def validate(self, state, costs, it: int) -> None:
+        try:
+            _checks.assert_costs_finite(
+                costs, f"resilience: bucket chunk ending at "
+                       f"iteration {it}")
+            _checks.assert_all_finite(
+                {"data": state["d"], "replicated": state["r"]},
+                f"resilience: bucket state after iteration {it}")
+        except _checks.CheckError as e:
+            raise DivergenceError(str(e), step=it) from e
+
+    def rollback(self, err: DivergenceError) -> int:
+        from repro.resilience.errors import ResilienceExhausted
+        self.report.record_fault("divergence", err.step, err)
+        if self._rollbacks_done >= self.cfg.max_rollbacks:
+            raise ResilienceExhausted(
+                f"rollback budget ({self.cfg.max_rollbacks}) exhausted; "
+                f"latest divergence: {err}") from err
+        self._rollbacks_done += 1
+        self.report.rollbacks += 1
+        t0 = time.perf_counter()
+        # same-boundary walk-back (see Supervisor.rollback): restoring
+        # the boundary that already diverged once would replay the same
+        # divergence unless a rescale hook perturbs it
+        if (self.ring and self.cfg.rollback_rescale is None
+                and self.ring[-1]["it"] == self._last_restored_it):
+            self.ring.pop()
+        if self.ring:
+            it = self._restore(self.ring.pop())
+        else:
+            it = self._restore_from_disk(err)
+        self._last_restored_it = it
+        if self.cfg.rollback_rescale is not None:
+            d = self.driver
+            d.state = dict(d.state, r=self.cfg.rollback_rescale(
+                d.state["r"], self._rollbacks_done))
+            d.bundle = d.bundle.with_data(d.state)
+        self.report.wall_time_lost_s += time.perf_counter() - t0
+        return it
+
+    def _restore_from_disk(self, err: DivergenceError) -> int:
+        from repro.resilience.errors import ResilienceExhausted
+        if self.cfg.checkpoint_dir is None:
+            raise ResilienceExhausted(
+                "snapshot ring exhausted and no checkpoint_dir to fall "
+                "back to; latest divergence: " + str(err)) from err
+        from repro.checkpoint import checkpointer as ckpt
+        step, _skipped = ckpt.latest_valid_step(self.cfg.checkpoint_dir)
+        if step is None:
+            raise ResilienceExhausted(
+                f"snapshot ring exhausted and no valid checkpoint under "
+                f"{self.cfg.checkpoint_dir!r}; latest divergence: {err}"
+            ) from err
+        payload, _ = ckpt.restore(self.cfg.checkpoint_dir, step,
+                                  self.driver.payload_template())
+        self.driver.load_payload(payload, rewind_logs=True)
+        self.report.checkpoint_restores += 1
+        return step
+
+    # --------------------------------------------------------- wrap-up
+    def finalize(self):
+        from repro.kernels import common as _kcommon
+        events = _kcommon.kernel_fallbacks()[self._kernel_baseline:]
+        self.report.kernel_fallbacks = [dict(e) for e in events]
+        return self.report

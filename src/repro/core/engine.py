@@ -225,6 +225,249 @@ def make_scan_step(fn: Callable, bundle: Bundle, *, chunk: int = 8,
     return jax.jit(mapped, donate_argnums=donated)
 
 
+# --------------------------------------------------------------------
+# Batched multi-instance steps (solve_many, DESIGN.md §19)
+# --------------------------------------------------------------------
+#
+# The batched state is ``{"d": data, "r": replicated_batched[, "last":
+# carried_out]}`` with every leaf carrying a leading instance axis B;
+# the bucket-shared replicated tree (``BatchAxes.shared_in_batch``)
+# rides separately and is broadcast.  The per-instance step runs under
+# ``vmap`` with ``axes=()`` — instances never psum into each other;
+# cross-device sharding splits the *batch* axis instead of the record
+# axis, so each device owns whole instances.
+
+
+def _bcast_mask(active, leaf):
+    return jnp.reshape(active, active.shape + (1,) * (leaf.ndim - 1))
+
+
+def freeze_where(active, new, old):
+    """Per-instance freeze: re-select ``old`` wherever the active mask
+    is False, so converged (or padded-filler) lanes stay bitwise
+    constant while live lanes advance.  Frozen lanes still *compute* —
+    masking discards the result — which is the price of keeping one
+    fused program; re-compaction (BatchedDriver) reclaims the FLOPs
+    once enough lanes retire."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(_bcast_mask(active, n), n, o), new, old)
+
+
+def _instance_struct(tree):
+    """Shape/dtype structure of one instance (leading batch axis
+    dropped)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(tuple(x.shape[1:]), x.dtype),
+        tree)
+
+
+def _merge_rep(r_i, shared):
+    """One instance's full replicated view: its batched slice overlaid
+    on the bucket-shared tree.  Non-dict replicated trees cannot split,
+    so they are all-batched (shared must be empty/None)."""
+    if shared is None:
+        return r_i
+    if isinstance(shared, dict) and isinstance(r_i, dict):
+        return {**shared, **r_i} if shared else r_i
+    if not shared:
+        return r_i
+    raise TypeError(
+        "shared_in_batch requires dict-shaped replicated state")
+
+
+def _split_rep(rep_full, r_i):
+    """Project an updated full replicated view back onto the batched
+    keys (the shared part is constant by declaration)."""
+    if isinstance(r_i, dict):
+        return {k: rep_full[k] for k in r_i}
+    return rep_full
+
+
+def _seed_like_batched(shapes, batch: int):
+    return jax.tree.map(
+        lambda s: (jnp.full((batch,) + tuple(s.shape), jnp.inf, s.dtype)
+                   if jnp.issubdtype(s.dtype, jnp.floating)
+                   else jnp.zeros((batch,) + tuple(s.shape), s.dtype)),
+        shapes)
+
+
+def _batch_size(state) -> int:
+    return jax.tree.leaves(state["d"])[0].shape[0]
+
+
+def _instance_out_struct(fn: Callable, state, shared):
+    d_i = _instance_struct(state["d"])
+    rep_i = _merge_rep(_instance_struct(state["r"]), shared)
+    return jax.eval_shape(lambda d, r: fn(d, r, ()), d_i, rep_i)
+
+
+def init_batched_out_like(fn: Callable, state, shared):
+    """(B,)-stacked +inf seed of ``fn``'s per-instance reduced output
+    (the carried slot for cost-skipping batched scans)."""
+    _, out = _instance_out_struct(fn, state, shared)
+    return _seed_like_batched(out, _batch_size(state))
+
+
+def init_batched_cost_like(fn_cost: Callable, state, shared):
+    """(B,)-stacked +inf seed of the per-instance objective (per-chunk
+    cost mode)."""
+    out = _instance_out_struct(fn_cost, state, shared)
+    return _seed_like_batched(out, _batch_size(state))
+
+
+def _batched_specs(bundle: Bundle, state):
+    """shard_map specs for the batched step: state leaves split on the
+    batch axis, shared replicated + the start index stay replicated,
+    traces are (chunk, B) with B split."""
+    bspec = bundle.record_spec()
+    state_spec = jax.tree.map(lambda _: bspec, state)
+    shared_spec = jax.tree.map(lambda _: P(), bundle.replicated)
+    trace_spec = P(None, bundle.axes) if bundle.axes else P()
+    return bspec, state_spec, shared_spec, trace_spec
+
+
+def make_batched_scan_step(fn: Callable, bundle: Bundle, state, *,
+                           chunk: int = 8, donate: bool = True,
+                           update_replicated: Optional[Callable] = None,
+                           fn_light: Optional[Callable] = None,
+                           cost_every: int = 1,
+                           light_updates_replicated: bool = False):
+    """Fuse ``chunk`` iterations across a whole bucket of instances
+    into one dispatch: the batched analogue of :func:`make_scan_step`.
+
+    Compiles ``step(state, shared, active, start) -> (state', trace)``
+    where ``state`` is the batched carry described above, ``shared`` is
+    the bucket-shared replicated tree, ``active`` is the per-instance
+    convergence mask (frozen lanes re-select their previous carry via
+    :func:`freeze_where` every iteration) and ``trace`` stacks the
+    per-instance scalar outputs into ``(chunk, B)`` buffers.  The
+    ``cost_every``/``fn_light``/``update_replicated`` semantics mirror
+    the single-instance factory, applied per instance under ``vmap``
+    (the cost-grid ``lax.cond`` predicate is batch-invariant, so it
+    stays a real branch).
+    """
+    use_light = fn_light is not None and cost_every > 1
+    has_last = "last" in state
+
+    def iter_i(d_i, r_i, shared, last_i, i):
+        rep = _merge_rep(r_i, shared)
+        if use_light and light_updates_replicated:
+            def on_grid(dd, lo):
+                return fn(dd, rep, ())
+
+            def off_grid(dd, lo):
+                d2, aux = fn_light(dd, rep, ())
+                return d2, {**lo, **aux}
+
+            d2, out = jax.lax.cond(i % cost_every == 0,
+                                   on_grid, off_grid, d_i, last_i)
+            r2 = (_split_rep(update_replicated(rep, out), r_i)
+                  if update_replicated else r_i)
+        elif use_light:
+            d2, out = jax.lax.cond(
+                i % cost_every == 0,
+                lambda dd, lo: fn(dd, rep, ()),
+                lambda dd, lo: (fn_light(dd, rep, ()), lo),
+                d_i, last_i)
+            r2 = (jax.lax.cond(
+                i % cost_every == 0,
+                lambda: _split_rep(update_replicated(rep, out), r_i),
+                lambda: r_i)
+                if update_replicated else r_i)
+        else:
+            d2, out = fn(d_i, rep, ())
+            r2 = (_split_rep(update_replicated(rep, out), r_i)
+                  if update_replicated else r_i)
+        return d2, r2, out, _scalar_trace(out)
+
+    biter = jax.vmap(iter_i,
+                     in_axes=(0, 0, None, 0 if has_last else None, None))
+
+    def chunk_fn(state, shared, active, start):
+        def body(st, i):
+            last = st["last"] if has_last else None
+            d2, r2, out, tr = biter(st["d"], st["r"], shared, last, i)
+            new = {"d": d2, "r": r2}
+            if has_last:
+                new["last"] = out
+            return freeze_where(active, new, st), tr
+
+        st, trace = jax.lax.scan(body, state, start + jnp.arange(chunk))
+        return st, trace
+
+    donated = (0,) if donate else ()
+    if bundle.mesh is None:
+        return jax.jit(chunk_fn, donate_argnums=donated)
+
+    bspec, state_spec, shared_spec, trace_spec = _batched_specs(
+        bundle, state)
+    _, out = _instance_out_struct(fn, state, bundle.replicated)
+    traces = jax.tree.map(lambda _: trace_spec, _scalar_trace(out))
+    mapped = shard_map(
+        chunk_fn, mesh=bundle.mesh,
+        in_specs=(state_spec, shared_spec, bspec, P()),
+        out_specs=(state_spec, traces), check_vma=False)
+    return jax.jit(mapped, donate_argnums=donated)
+
+
+def make_batched_chunk_cost_step(fn_light: Callable, fn_cost: Callable,
+                                 bundle: Bundle, state, *,
+                                 chunk: int = 8, donate: bool = True,
+                                 update_replicated: Optional[Callable]
+                                 = None):
+    """Batched analogue of :func:`make_chunk_cost_step`: the scan body
+    runs only the vmapped cost-free step; the per-instance objective is
+    evaluated once per dispatch on the chunk's final state and carried
+    in ``state["last"]``.  Frozen lanes keep their previous objective —
+    the trace a converged instance reports never moves again.
+
+    Same compiled signature as :func:`make_batched_scan_step`:
+    ``step(state, shared, active, start) -> (state', trace)``.
+    """
+
+    def light_i(d_i, r_i, shared):
+        rep = _merge_rep(r_i, shared)
+        if update_replicated is None:
+            return fn_light(d_i, rep, ()), r_i
+        d2, aux = fn_light(d_i, rep, ())
+        return d2, _split_rep(update_replicated(rep, aux), r_i)
+
+    def cost_i(d_i, r_i, shared):
+        return fn_cost(d_i, _merge_rep(r_i, shared), ())
+
+    blight = jax.vmap(light_i, in_axes=(0, 0, None))
+    bcost = jax.vmap(cost_i, in_axes=(0, 0, None))
+
+    def chunk_fn(state, shared, active, start):
+        def body(st, _):
+            d2, r2 = blight(st["d"], st["r"], shared)
+            return freeze_where(active, {"d": d2, "r": r2}, st), None
+
+        core, _ = jax.lax.scan(
+            body, {"d": state["d"], "r": state["r"]}, None, length=chunk)
+        fresh = bcost(core["d"], core["r"], shared)
+        fresh = freeze_where(active, fresh, state["last"])
+        trace = jax.tree.map(
+            lambda s, f: jnp.concatenate(
+                [jnp.broadcast_to(s, (chunk - 1,) + jnp.shape(s)),
+                 jnp.asarray(f)[None]]), state["last"], fresh)
+        return dict(core, last=fresh), trace
+
+    donated = (0,) if donate else ()
+    if bundle.mesh is None:
+        return jax.jit(chunk_fn, donate_argnums=donated)
+
+    bspec, state_spec, shared_spec, trace_spec = _batched_specs(
+        bundle, state)
+    cost_shape = _instance_out_struct(fn_cost, state, bundle.replicated)
+    traces = jax.tree.map(lambda _: trace_spec, cost_shape)
+    mapped = shard_map(
+        chunk_fn, mesh=bundle.mesh,
+        in_specs=(state_spec, shared_spec, bspec, P()),
+        out_specs=(state_spec, traces), check_vma=False)
+    return jax.jit(mapped, donate_argnums=donated)
+
+
 def make_chunk_cost_step(fn_light: Callable, fn_cost: Callable,
                          bundle: Bundle, *, chunk: int = 8,
                          donate: bool = True,

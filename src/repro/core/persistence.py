@@ -107,6 +107,54 @@ def readmit_state(bundle: Bundle, host_state: Any) -> Any:
     }
 
 
+# --------------------------------------------------------------------
+# Batched (solve_many) spill/readmit helpers — DESIGN.md §19.  A bucket's
+# state tree {"d", "r"[, "last"]} leads every leaf with the instance
+# axis, which is also the sharded one, so one record-spec sharding
+# covers the whole tree.
+# --------------------------------------------------------------------
+
+
+def readmit_batched(bundle: Bundle, host_state: Any) -> Any:
+    """Device-place a batched state tree under the bundle's mesh: every
+    leaf splits on its leading instance axis (``record_spec``)."""
+    if bundle.mesh is None:
+        return jax.tree.map(jax.numpy.asarray, host_state)
+    from jax.sharding import NamedSharding
+    shard = NamedSharding(bundle.mesh, bundle.record_spec())
+    return jax.tree.map(lambda x: jax.device_put(x, shard), host_state)
+
+
+def scatter_batched(host_state: Any, slots, total: int) -> Any:
+    """Expand a compacted batched host state back to the full bucket
+    layout: output row ``slots[s]`` takes compacted slice ``s``; rows
+    not covered stay zero (the caller overwrites them from retired
+    spills).  Checkpoints always use the full layout so restore is
+    independent of when re-compaction happened."""
+    slots = np.asarray(slots)
+
+    def scatter(x):
+        x = np.asarray(x)
+        out = np.zeros((total,) + x.shape[1:], x.dtype)
+        out[slots] = x
+        return out
+
+    return jax.tree.map(scatter, host_state)
+
+
+def slice_instance(host_state: Any, row: int) -> Any:
+    """One instance's slice of a batched host state tree."""
+    return jax.tree.map(lambda x: x[row], host_state)
+
+
+def set_instance(host_state: Any, row: int, inst: Any) -> None:
+    """Write one instance's slices into a batched host state in place
+    (numpy leaves; leaf order is canonical pytree order)."""
+    for dst, src in zip(jax.tree.leaves(host_state),
+                        jax.tree.leaves(inst)):
+        dst[row] = src
+
+
 def bundle_shardings(bundle: Bundle) -> Any:
     """NamedSharding trees matching :func:`spill_bundle`'s layout —
     hand these to ``checkpoint.checkpointer.restore(shardings=...)`` so

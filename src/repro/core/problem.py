@@ -31,14 +31,18 @@ from __future__ import annotations
 import importlib
 import warnings
 from dataclasses import dataclass, replace
-from typing import (Any, Callable, ClassVar, Dict, Optional, Tuple, Type,
-                    Union)
+from typing import (Any, Callable, ClassVar, Dict, List, Optional, Tuple,
+                    Type, Union)
 
 import dataclasses
 
-from repro.core import checks, persistence
-from repro.core.bundle import Bundle, gather
-from repro.core.driver import IterativeDriver, RunLog, RunOptions
+import jax
+import numpy as np
+
+from repro.core import batching, checks, persistence
+from repro.core.bundle import Bundle, _dp_axes, gather
+from repro.core.driver import (BatchedDriver, IterativeDriver, RunLog,
+                               RunOptions)
 from repro.resilience import chaos as _chaos
 
 # --------------------------------------------------------------------
@@ -120,6 +124,16 @@ class Problem:
 
     def finalize(self, bundle: Bundle, log: RunLog) -> Tuple[Any, Dict]:
         return gather(bundle), {}
+
+    def batch_axes(self) -> batching.BatchAxes:
+        """How instances of this workload batch under :func:`solve_many`
+        (DESIGN.md §19): the record axis of each raw input, whether
+        record padding is allowed, which replicated keys are shared
+        across a bucket, and which constructor attributes are declared
+        instance-invariant (consumed by lint rule RPL801).  The default
+        declares record axis 0 on every input, full padding, and no
+        shared state."""
+        return batching.BatchAxes()
 
     # ------------------------------------------------------- plumbing
     def _declared(self, hook: str) -> Optional[Callable]:
@@ -293,6 +307,41 @@ def _as_problem(problem: Union[str, Problem, Type[Problem]],
     return problem
 
 
+def _resolved_options(problem: Problem, options: Optional[RunOptions],
+                      run_opts: Dict[str, Any]) -> RunOptions:
+    """Shared option resolution of :func:`solve` / :func:`solve_many`:
+    reject non-run-control kwargs and pre-wired step options, merge
+    per-call overrides over the problem's defaults, honour the
+    REPRO_CHECKS force-enable."""
+    bad = set(run_opts) - set(_RUN_CONTROL_KEYS)
+    if bad:
+        raise TypeError(
+            f"got unexpected run options {sorted(bad)}; valid: "
+            f"{list(_RUN_CONTROL_KEYS)}.  Step wiring "
+            f"(step_fn_light/step_fn_cost/update_replicated/...) is "
+            f"derived from the Problem declaration, not passed to "
+            f"solve().")
+    if options is not None:
+        defaults = RunOptions()
+        wired = [f for f in ("step_fn_light", "step_fn_cost",
+                             "update_replicated",
+                             "light_updates_replicated")
+                 if getattr(options, f) != getattr(defaults, f)]
+        if wired:
+            raise TypeError(
+                f"options= carries step wiring {wired}, which solve() "
+                f"derives from the Problem declaration and would "
+                f"overwrite; declare the hooks on the Problem instead "
+                f"(DESIGN.md §14)")
+    opts = options if options is not None else problem.default_options()
+    opts = opts.merged_with(**run_opts)
+    # runtime contract sanitizers: checks=True per call, or REPRO_CHECKS=1
+    # force-enables for every solve() in the process (repro.core.checks)
+    if checks.checks_enabled(opts.checks) and not opts.checks:
+        opts = replace(opts, checks=True)
+    return opts
+
+
 def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
           cfg=None, mesh=None, options: Optional[RunOptions] = None,
           checkpoint_dir=None, resume: Union[bool, int] = False,
@@ -323,33 +372,8 @@ def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
     built bundle and continues iterating from there — the cost
     trajectory continues exactly where the checkpointed run left off.
     """
-    bad = set(run_opts) - set(_RUN_CONTROL_KEYS)
-    if bad:
-        raise TypeError(
-            f"solve() got unexpected run options {sorted(bad)}; valid: "
-            f"{list(_RUN_CONTROL_KEYS)}.  Step wiring "
-            f"(step_fn_light/step_fn_cost/update_replicated/...) is "
-            f"derived from the Problem declaration, not passed to "
-            f"solve().")
     problem = _as_problem(problem, cfg)
-    if options is not None:
-        defaults = RunOptions()
-        wired = [f for f in ("step_fn_light", "step_fn_cost",
-                             "update_replicated",
-                             "light_updates_replicated")
-                 if getattr(options, f) != getattr(defaults, f)]
-        if wired:
-            raise TypeError(
-                f"options= carries step wiring {wired}, which solve() "
-                f"derives from the Problem declaration and would "
-                f"overwrite; declare the hooks on the Problem instead "
-                f"(DESIGN.md §14)")
-    opts = options if options is not None else problem.default_options()
-    opts = opts.merged_with(**run_opts)
-    # runtime contract sanitizers: checks=True per call, or REPRO_CHECKS=1
-    # force-enables for every solve() in the process (repro.core.checks)
-    if checks.checks_enabled(opts.checks) and not opts.checks:
-        opts = replace(opts, checks=True)
+    opts = _resolved_options(problem, options, run_opts)
 
     if opts.resilience is not None:
         # kernel degradations can happen while *building* the problem
@@ -466,3 +490,249 @@ def solve(problem: Union[str, Problem, Type[Problem]], *inputs,
         driver.recovery.kernel_fallbacks = [dict(e) for e in events]
     return Solution(x=x, aux=aux, log=driver.log, bundle=out,
                     problem=problem, recovery=driver.recovery)
+
+
+# --------------------------------------------------------------------
+# Batched multi-instance entry point (DESIGN.md §19)
+# --------------------------------------------------------------------
+
+
+def solve_many(problem: Union[str, Problem, Type[Problem]],
+               instances, *, cfg=None, mesh=None,
+               options: Optional[RunOptions] = None,
+               checkpoint_dir=None, resume: bool = False,
+               waste_budget: float = 0.25,
+               recompact_below: float = 0.5,
+               **run_opts) -> List[Solution]:
+    """Solve many independent instances of one workload in batched
+    device programs (DESIGN.md §19).
+
+    ``instances`` is a sequence of input tuples, each exactly what the
+    corresponding single :func:`solve` call would receive.  Instances
+    are grouped into buckets by static signature (``Problem.
+    batch_axes``), record-padded up to the bucket capacity within
+    ``waste_budget``, stacked along a leading batch axis, and run
+    through the fused chunked engine — K iterations across ALL of a
+    bucket's instances per dispatch.  Per-instance convergence is
+    tracked by an active mask: a converged instance's lane freezes (its
+    ``Solution.log.iters_run`` stops growing) and the bucket re-compacts
+    to the live lanes once the active fraction drops below
+    ``recompact_below``.
+
+    Composes with the single-solve production knobs: ``resilience=``
+    supervises each bucket's dispatches (retry/rollback with batch-
+    aware snapshots), and ``checkpoint_dir=`` + ``checkpoint_every=``
+    writes per-bucket full-layout checkpoints under
+    ``<checkpoint_dir>/bucket_<key>`` (deterministic bucket keys, so
+    ``resume=True`` re-plans the same buckets and restores each from
+    its newest valid step).
+
+    Returns one :class:`Solution` per instance, in input order.
+    """
+    problem = _as_problem(problem, cfg)
+    opts = _resolved_options(problem, options, run_opts)
+    instances = [tuple(inst) for inst in instances]
+    if not instances:
+        return []
+    axes = problem.batch_axes()
+    if not isinstance(axes, batching.BatchAxes):
+        raise TypeError(
+            f"{type(problem).__name__}.batch_axes() must return a "
+            f"batching.BatchAxes, got {type(axes).__name__}")
+    if axes.shared_in_batch and \
+            problem._declared("refresh_replicated") is not None:
+        raise ValueError(
+            f"{type(problem).__name__}: shared_in_batch="
+            f"{axes.shared_in_batch} cannot combine with "
+            f"refresh_replicated — the per-iteration broadcast update "
+            f"rewrites the replicated tree, so no key is guaranteed "
+            f"instance-independent across a bucket")
+    salt = (f"{problem.name or type(problem).__name__}|"
+            f"{_config_fingerprint(problem)}")
+    plan = batching.plan_buckets(instances, axes,
+                                 waste_budget=waste_budget, salt=salt)
+
+    if checkpoint_dir is not None:
+        from pathlib import Path
+
+        from repro.checkpoint import checkpointer as ckpt
+        if isinstance(resume, int) and not isinstance(resume, bool):
+            raise ValueError(
+                "solve_many resumes each bucket from its newest valid "
+                "step — pass resume=True, not an explicit step number")
+        if resume:
+            found = any(
+                ckpt.latest_step(Path(checkpoint_dir)
+                                 / f"bucket_{b.key}") is not None
+                for b in plan)
+            if not found:
+                raise ValueError(
+                    f"resume=True but no bucket checkpoints found under "
+                    f"{checkpoint_dir!r} — wrong directory, a different "
+                    f"instance plan (bucket keys changed), or the first "
+                    f"checkpoint was never written")
+        elif not opts.checkpoint_every and opts.checkpoint_fn is None:
+            raise ValueError(
+                "checkpoint_dir= given but neither checkpoint_every= "
+                "nor resume= requested — no checkpoint would ever be "
+                "read or written")
+    else:
+        if resume is not False:
+            raise ValueError("resume= requires checkpoint_dir=")
+        if opts.checkpoint_every and opts.checkpoint_fn is None:
+            raise ValueError(
+                "checkpoint_every= without checkpoint_dir= (or a "
+                "custom checkpoint_fn) would silently write nothing")
+
+    if opts.resilience is not None:
+        from repro.kernels import common as _kcommon
+        kernel_baseline = len(_kcommon.kernel_fallbacks())
+
+    solutions: List[Optional[Solution]] = [None] * len(instances)
+    with _chaos.maybe_from_env():
+        for bucket in plan:
+            _run_bucket(problem, bucket, instances, opts, mesh, axes,
+                        checkpoint_dir, resume, recompact_below,
+                        solutions)
+    if opts.resilience is not None:
+        # kernel degradations during bundle building happen before each
+        # bucket's supervisor exists — rebase every report on the
+        # call-level baseline (mirrors solve())
+        events = _kcommon.kernel_fallbacks()[kernel_baseline:]
+        for report in {id(s.recovery): s.recovery for s in solutions
+                       if s is not None and s.recovery is not None
+                       }.values():
+            report.kernel_fallbacks = [dict(e) for e in events]
+    return solutions
+
+
+def _run_bucket(problem: Problem, bucket: batching.Bucket, instances,
+                opts: RunOptions, mesh, axes: batching.BatchAxes,
+                checkpoint_dir, resume, recompact_below: float,
+                solutions: List[Optional[Solution]]) -> None:
+    """Stack, run, and unpack one bucket, writing Solutions in place."""
+    import jax.numpy as jnp
+
+    # init_bundle runs per instance on the UNPADDED inputs with no mesh:
+    # derived replicated state (operator norms from shape-dependent
+    # power iterations, step sizes) must match the single solve exactly;
+    # padding is applied to the built bundle's record axes instead
+    # (zero rows are inert through every builtin step)
+    bundles = [problem.init_bundle(instances[j], None)
+               for j in bucket.indices]
+    shared_keys = tuple(axes.shared_in_batch)
+
+    def split_rep(rep):
+        if not shared_keys:
+            return None, rep
+        if not isinstance(rep, dict):
+            raise TypeError(
+                f"{type(problem).__name__}: shared_in_batch="
+                f"{shared_keys} requires dict-shaped replicated state")
+        missing = [k for k in shared_keys if k not in rep]
+        if missing:
+            raise ValueError(
+                f"{type(problem).__name__}: batch_axes declares shared "
+                f"replicated keys {missing} absent from init_bundle's "
+                f"replicated tree {sorted(rep)}")
+        return ({k: rep[k] for k in shared_keys},
+                {k: v for k, v in rep.items() if k not in shared_keys})
+
+    shared, _ = split_rep(bundles[0].replicated)
+    state_d = batching.stack_trees(
+        [batching.pad_tree_records(b.data, bucket.capacity)
+         for b in bundles])
+    state_r = batching.stack_trees(
+        [split_rep(b.replicated)[1] for b in bundles])
+    orig = np.asarray(bucket.indices, dtype=np.int64)
+    parts = 1
+    if mesh is not None:
+        for a in _dp_axes(mesh):
+            parts *= mesh.shape[a]
+    need = (-len(orig)) % max(parts, 1)
+    if need:
+        # mesh alignment: duplicate the last instance into filler lanes
+        # (inactive from the start, never reported) so the batch axis
+        # divides across the data-parallel submesh
+        def dup(x):
+            return jnp.concatenate([x] + [x[-1:]] * need, axis=0)
+
+        state_d = jax.tree.map(dup, state_d)
+        state_r = jax.tree.map(dup, state_r)
+        orig = np.concatenate([orig, np.full(need, -1, np.int64)])
+    bundle = Bundle.create({"d": state_d, "r": state_r}, mesh=mesh,
+                           replicated=shared)
+
+    bopts = opts
+    writer = None
+    bdir = None
+    start_iter = 0
+    if checkpoint_dir is not None:
+        from pathlib import Path
+
+        from repro.checkpoint import checkpointer as ckpt
+        bdir = Path(checkpoint_dir) / f"bucket_{bucket.key}"
+        meta = {"problem": problem.name or type(problem).__name__,
+                "config": _config_fingerprint(problem),
+                "bucket": bucket.key,
+                "capacity": int(bucket.capacity),
+                "instances": [int(j) for j in bucket.indices]}
+        if bopts.checkpoint_every and bopts.checkpoint_fn is None:
+            writer = ckpt.Checkpointer(bdir, meta=meta)
+
+            def checkpoint_fn(payload, i: int,
+                              _writer=writer) -> None:
+                _writer.save_async(i + 1, payload)
+
+            bopts = replace(bopts, checkpoint_fn=checkpoint_fn)
+    if bopts.resilience is not None and bdir is not None \
+            and bopts.resilience.checkpoint_dir is None:
+        bopts = replace(bopts, resilience=dataclasses.replace(
+            bopts.resilience, checkpoint_dir=str(bdir)))
+
+    driver = BatchedDriver(problem.full_step, bundle,
+                           options=derive_options(problem, bopts),
+                           orig_indices=orig,
+                           recompact_below=recompact_below)
+    if bdir is not None and resume:
+        step, corrupt = ckpt.latest_valid_step(bdir)
+        if step is not None:
+            if corrupt:
+                warnings.warn(
+                    f"newest checkpoint(s) {corrupt} under {str(bdir)!r} "
+                    f"failed integrity validation (torn write?); "
+                    f"resuming bucket from step {step} instead",
+                    RuntimeWarning, stacklevel=3)
+            payload, _ = ckpt.restore(
+                bdir, step, driver.payload_template(),
+                expect_meta=lambda m: m.get("problem") == meta["problem"]
+                and m.get("config") == meta["config"]
+                and m.get("bucket") == meta["bucket"])
+            driver.load_payload(payload)
+            start_iter = step
+        # a bucket with no checkpoint yet simply starts from scratch —
+        # the plan-level pre-scan already guaranteed the resume is sane
+
+    driver.run(start_iter=start_iter)
+    if writer is not None:
+        writer.wait()
+
+    shared_host = (persistence.to_host(shared)
+                   if shared is not None else None)
+    states = driver.host_states()
+    for row, j in enumerate(orig.tolist()):
+        if j < 0:
+            continue                               # filler lane
+        inst = states[row]
+        n = bucket.records[row]
+        d_host = jax.tree.map(lambda x, _n=n: x[:_n], inst["d"])
+        rep = inst["r"]
+        if shared_host is not None:
+            rep = {**shared_host, **rep} if isinstance(rep, dict) \
+                else shared_host
+        b_inst = Bundle(data=d_host, replicated=rep, mesh=None, axes=())
+        log = driver.logs[row]
+        x, aux = problem.finalize(b_inst, log)
+        solutions[j] = Solution(x=x, aux=aux, log=log, bundle=b_inst,
+                                problem=problem,
+                                recovery=driver.recovery)

@@ -216,6 +216,17 @@ class DeconvolutionProblem(Problem):
     def finalize(self, bundle, log):
         return gather(bundle)["Xp"], {}
 
+    def batch_axes(self):
+        from repro.core.batching import BatchAxes
+        # (Y, psfs) are both stamp-major; every bundle leaf (including
+        # the paired PSF spectra and the starlet weights) is fully
+        # per-record, so zero-padded stamps are inert.  The SVT test
+        # matrix depends only on config and is shared across a bucket;
+        # the noise level is a constructor scalar shared by declaration.
+        shared = ("omega",) if self.cfg.mode == "lowrank" else ()
+        return BatchAxes(record_axes=(0, 0), shared_in_batch=shared,
+                         instance_invariant=("sigma_noise",))
+
 
 def deconvolve(Y, psfs, cfg: SolverConfig, mesh=None,
                sigma_noise: float = 0.02,

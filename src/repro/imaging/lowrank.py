@@ -156,3 +156,11 @@ class LowRankCompletionProblem(Problem):
 
     def finalize(self, bundle, log):
         return gather(bundle)["X"], {}
+
+    def batch_axes(self):
+        from repro.core.batching import BatchAxes
+        # (Y, M) are row-major; the SVT test matrix is drawn from a
+        # fixed key + config shape only, so one copy serves the bucket.
+        # ``key`` is a constructor attribute shared by declaration.
+        return BatchAxes(record_axes=(0, 0), shared_in_batch=("omega",),
+                         instance_invariant=("key",))

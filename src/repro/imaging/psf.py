@@ -22,6 +22,7 @@ and anisotropic" property), plus white Gaussian noise.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple, Tuple
 
 import jax
@@ -197,6 +198,14 @@ def spectral_norm(psfs: jax.Array, iters: int = 60, key=None,
     ku, kv = jax.random.split(key)
     u = jax.random.normal(ku, psfs.shape)
     v = jax.random.normal(kv, psfs.shape)
+    # the whole iteration is one jitted program (module-level cache):
+    # eagerly, lax.scan re-traces its closure body on every call, which
+    # made this the dominant per-instance setup cost for populations
+    return float(_power_norm(u, v, kf_pair, iters))
+
+
+@partial(jax.jit, static_argnames="iters")
+def _power_norm(u, v, kf_pair, iters: int):
     nrm0 = jnp.sqrt(jnp.sum(u ** 2) + jnp.sum(v ** 2))
     u, v = u / nrm0, v / nrm0
 
@@ -207,7 +216,7 @@ def spectral_norm(psfs: jax.Array, iters: int = 60, key=None,
         return (Htv / nrm, Hu / nrm), nrm
 
     _, norms = jax.lax.scan(body, (u, v), None, length=iters)
-    return float(norms[-1])
+    return norms[-1]
 
 
 class PsfData(NamedTuple):

@@ -342,6 +342,19 @@ class SCDLProblem(Problem):
         Xl = jax.device_get(bundle.replicated["Xl"])
         return (Xh, Xl), {}
 
+    def batch_axes(self):
+        from repro.core.batching import BatchAxes
+        # samples live on axis 1 of the raw (P, K)/(M, K) patch
+        # matrices.  No record padding: the per-iteration Gram matrices
+        # reduce over the sample axis, and although zero columns add
+        # nothing analytically, the dictionaries are part of the carry
+        # and sensitive to the reduction's floating-point grouping —
+        # instances bucket on exact K instead.  The dictionaries and
+        # their factor caches are per-instance iterate state, so
+        # nothing is shared across a bucket.
+        return BatchAxes(record_axes=(1, 1), pad_records=False,
+                        instance_invariant=("key",))
+
 
 def train(S_h, S_l, cfg: SCDLConfig, mesh=None, key=None,
           max_iter: Optional[int] = None, chunk: int = 8,

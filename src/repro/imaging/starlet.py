@@ -13,7 +13,7 @@ stamp the difference is negligible (documented deviation).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -85,8 +85,20 @@ def adjoint(coeffs: jax.Array, n_scales: int) -> jax.Array:
 
 def spectral_norm(n_scales: int, shape=(41, 41), iters: int = 30,
                   key=None) -> float:
-    """||Phi||_2 via power iteration (used for Condat step sizes)."""
-    key = key if key is not None else jax.random.PRNGKey(0)
+    """||Phi||_2 via power iteration (used for Condat step sizes).
+
+    The operator depends only on ``(n_scales, shape)`` — not on any
+    data — so the default-key estimate is memoized: a population of
+    same-shape instances (``solve_many``, or a loop of ``solve`` calls)
+    pays the 30-step iteration once, not per instance.
+    """
+    if key is None:
+        return _spectral_norm_default(int(n_scales), tuple(shape),
+                                      int(iters))
+    return _spectral_norm_impl(n_scales, shape, iters, key)
+
+
+def _spectral_norm_impl(n_scales, shape, iters, key) -> float:
     x = jax.random.normal(key, shape)
 
     def body(x, _):
@@ -97,6 +109,13 @@ def spectral_norm(n_scales: int, shape=(41, 41), iters: int = 30,
 
     _, norms = jax.lax.scan(body, x, None, length=iters)
     return float(jnp.sqrt(norms[-1]))
+
+
+@lru_cache(maxsize=None)
+def _spectral_norm_default(n_scales: int, shape: tuple,
+                           iters: int) -> float:
+    return _spectral_norm_impl(n_scales, shape, iters,
+                               jax.random.PRNGKey(0))
 
 
 def noise_std_scales(n_scales: int, shape=(41, 41), n_mc: int = 8,

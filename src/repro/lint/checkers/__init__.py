@@ -1,8 +1,8 @@
 """Built-in checkers.  Importing this package registers all of them
 (each module calls :func:`repro.lint.core.register_checker` at import
 time); ``repro.lint.core`` imports it lazily before every run."""
-from repro.lint.checkers import (donation, dtypes, imports, pallas,
-                                 protocol, resilience, tracer)
+from repro.lint.checkers import (batching, donation, dtypes, imports,
+                                 pallas, protocol, resilience, tracer)
 
-__all__ = ["donation", "dtypes", "imports", "pallas", "protocol",
-           "resilience", "tracer"]
+__all__ = ["batching", "donation", "dtypes", "imports", "pallas",
+           "protocol", "resilience", "tracer"]

@@ -1,0 +1,93 @@
+"""Batch-axes hygiene for ``@register``-ed workloads (DESIGN.md §19).
+
+RPL801 batch-axes : a registered Problem's ``init_bundle`` closes over
+                    per-instance constructor state (``self.<attr>``)
+                    that its ``batch_axes()`` declaration never
+                    mentions.  ``solve_many`` builds ONE problem object
+                    and calls ``init_bundle`` once per instance, so any
+                    attribute the hook reads is silently shared across
+                    the whole batch.  That is only sound when the author
+                    says so — by naming the attribute in the
+                    ``instance_invariant``/``shared_in_batch`` tuples of
+                    the :class:`repro.core.batching.BatchAxes` the hook
+                    returns.  An undeclared closure is the classic
+                    batched-solve bug: per-instance noise levels or RNG
+                    keys frozen to the first instance's value.
+
+``self.cfg`` (the config object every Problem carries) and reads of the
+class's own methods are exempt; so are private ``self._*`` caches.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.lint.checkers._ast_util import import_aliases
+from repro.lint.checkers.protocol import _methods, _registered
+from repro.lint.core import Finding, ModuleSource, Rule, register_checker
+
+RPL801 = Rule("RPL801", "batch-axes",
+              "init_bundle closes over per-instance state not declared "
+              "in batch_axes()")
+
+
+def _self_reads(fn: ast.AST) -> Set[str]:
+    """Names of ``self.<attr>`` loads anywhere in the function body."""
+    reads: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.ctx, ast.Load) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == "self":
+            reads.add(node.attr)
+    return reads
+
+
+def _declared_names(fn: ast.AST) -> Set[str]:
+    """Every string literal in the batch_axes body — the union of the
+    ``shared_in_batch``/``instance_invariant`` tuples regardless of how
+    the BatchAxes call is spelled (conditionals, helper vars)."""
+    return {node.value for node in ast.walk(fn)
+            if isinstance(node, ast.Constant) and
+            isinstance(node.value, str)}
+
+
+def _check_class(mod, cls, findings) -> None:
+    methods = _methods(cls)
+    init = methods.get("init_bundle")
+    if init is None:
+        return                      # RPL501's problem, not ours
+    attrs = {a for a in _self_reads(init)
+             if a != "cfg" and not a.startswith("_")
+             and a not in methods}
+    if not attrs:
+        return
+    ba = methods.get("batch_axes")
+    if ba is None:
+        findings.append(mod.finding(
+            RPL801, init,
+            f"'{cls.name}.init_bundle' reads constructor state "
+            f"({', '.join(sorted(attrs))}) but '{cls.name}' declares no "
+            f"batch_axes() — solve_many would silently share these "
+            f"across every instance; declare them in BatchAxes("
+            f"instance_invariant=...) or shared_in_batch"))
+        return
+    declared = _declared_names(ba)
+    for attr in sorted(attrs - declared):
+        findings.append(mod.finding(
+            RPL801, init,
+            f"'{cls.name}.init_bundle' reads self.{attr}, which "
+            f"batch_axes() never declares — under solve_many every "
+            f"instance gets the same {attr}; add it to "
+            f"instance_invariant (or shared_in_batch) if that is "
+            f"intended"))
+
+
+@register_checker("batching", [RPL801])
+def check(mod: ModuleSource):
+    aliases = import_aliases(mod.tree)
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef) and _registered(node, aliases):
+            _check_class(mod, node, findings)
+    return findings

@@ -766,6 +766,98 @@ def test_rpl701_out_of_scope_not_flagged(tmp_path):
 
 
 # =====================================================================
+# RPL801 batch-axes
+# =====================================================================
+
+def test_rpl801_undeclared_constructor_state(tmp_path):
+    found = _lint(tmp_path, """
+        from repro.core.problem import Problem, register
+
+        @register("toy")
+        class Toy(Problem):
+            def __init__(self, cfg=None, sigma=0.02):
+                self.cfg = cfg
+                self.sigma = sigma
+
+            def init_bundle(self, inputs, mesh):
+                return build(inputs, self.cfg, noise=self.sigma)
+
+            def full_step(self, d, rep, axes):
+                return d, {"cost": 0.0}
+
+            def batch_axes(self):
+                from repro.core.batching import BatchAxes
+                return BatchAxes(record_axes=0)
+    """)
+    hits = _only(found, "RPL801")
+    assert len(hits) == 1
+    assert "self.sigma" in hits[0].message
+    assert "instance_invariant" in hits[0].message
+
+
+def test_rpl801_missing_batch_axes_declaration(tmp_path):
+    found = _lint(tmp_path, """
+        from repro.core.problem import Problem, register
+
+        @register("toy")
+        class Toy(Problem):
+            def __init__(self, key=None):
+                self.key = key
+
+            def init_bundle(self, inputs, mesh):
+                return build(inputs, key=self.key, cfg=self.cfg)
+
+            def full_step(self, d, rep, axes):
+                return d, {"cost": 0.0}
+    """)
+    hits = _only(found, "RPL801")
+    assert len(hits) == 1
+    assert "declares no batch_axes()" in hits[0].message
+    assert "key" in hits[0].message
+
+
+def test_rpl801_declared_state_is_clean(tmp_path):
+    found = _lint(tmp_path, """
+        from repro.core.batching import BatchAxes
+        from repro.core.problem import Problem, register
+
+        @register("toy")
+        class Toy(Problem):
+            def __init__(self, cfg=None, key=None):
+                self.cfg = cfg
+                self.key = key
+                self._cache = None
+
+            def init_bundle(self, inputs, mesh):
+                return build(inputs, self.cfg, key=self.key,
+                             helper=self.helper())
+
+            def helper(self):
+                return 1
+
+            def full_step(self, d, rep, axes):
+                return d, {"cost": 0.0}
+
+            def batch_axes(self):
+                return BatchAxes(record_axes=0,
+                                 instance_invariant=("key",))
+    """)
+    assert _only(found, "RPL801") == []
+
+
+def test_rpl801_unregistered_class_not_flagged(tmp_path):
+    found = _lint(tmp_path, """
+        class Helper:
+            def __init__(self, sigma):
+                self.sigma = sigma
+
+            def init_bundle(self, inputs, mesh):
+                return build(inputs, self.sigma)
+    """)
+    assert _only(found, "RPL801") == []
+
+
+# =====================================================================
 # Registry / CLI / output contracts
 # =====================================================================
 
@@ -785,6 +877,7 @@ def test_rule_ids_stable():
         "RPL502": "problem-metadata",
         "RPL601": "noncanonical-import",
         "RPL701": "swallowed-exception",
+        "RPL801": "batch-axes",
     }
 
 

@@ -47,6 +47,16 @@ def scdl_data():
     return coupled_patches(256, 25, 9, 16, seed=0)
 
 
+@pytest.fixture(scope="module")
+def lowrank_data():
+    rng = np.random.default_rng(4)
+    U = rng.normal(size=(24, 3)).astype(np.float32)
+    V = rng.normal(size=(3, 18)).astype(np.float32)
+    Y = U @ V + 0.01 * rng.normal(size=(24, 18)).astype(np.float32)
+    M = (rng.random((24, 18)) < 0.6).astype(np.float32)
+    return Y, M
+
+
 def _solve(workload, data, **kw):
     opts = dict(max_iter=ITERS, tol=0, chunk=CHUNK)
     opts.update(kw)
@@ -54,6 +64,11 @@ def _solve(workload, data, **kw):
         from repro.imaging.condat import SolverConfig
         return solve("deconvolve", data.Y, data.psfs,
                      cfg=SolverConfig(mode="sparse", n_scales=3), **opts)
+    if workload == "lowrank":
+        from repro.imaging.lowrank import CompletionConfig
+        Y, M = data
+        return solve("lowrank", Y, M,
+                     cfg=CompletionConfig(rank=4, max_iter=ITERS), **opts)
     from repro.imaging.scdl import SCDLConfig
     S_h, S_l = data
     return solve("scdl", S_h, S_l,
@@ -61,10 +76,11 @@ def _solve(workload, data, **kw):
 
 
 @pytest.fixture(scope="module")
-def ref_trajs(psf_data, scdl_data):
+def ref_trajs(psf_data, scdl_data, lowrank_data):
     """Fault-free reference runs, one per workload."""
     return {"deconvolve": _solve("deconvolve", psf_data),
-            "scdl": _solve("scdl", scdl_data)}
+            "scdl": _solve("scdl", scdl_data),
+            "lowrank": _solve("lowrank", lowrank_data)}
 
 
 def _assert_parity(sol, ref):
@@ -80,10 +96,11 @@ def _assert_parity(sol, ref):
 
 @pytest.mark.parametrize("pos", [0, 1, 2], ids=["first", "mid", "last"])
 @pytest.mark.parametrize("point", ["dispatch", "carry_nan"])
-@pytest.mark.parametrize("workload", ["deconvolve", "scdl"])
+@pytest.mark.parametrize("workload", ["deconvolve", "scdl", "lowrank"])
 def test_chaos_matrix_auto_recovers(workload, point, pos, psf_data,
-                                    scdl_data, ref_trajs):
-    data = psf_data if workload == "deconvolve" else scdl_data
+                                    scdl_data, lowrank_data, ref_trajs):
+    data = {"deconvolve": psf_data, "scdl": scdl_data,
+            "lowrank": lowrank_data}[workload]
     cc = chaos.ChaosConfig.parse(f"{point}@{pos};seed=11")
     with chaos.active_chaos(cc) as st:
         sol = _solve(workload, data, resilience=ResilienceConfig())
