@@ -1,0 +1,168 @@
+"""Serving throughput: coalescing micro-batch scheduler vs serialized.
+
+The §20 claim under benchmark: when many clients hit the service at
+once, coalescing compatible requests into ``solve_many`` buckets beats
+dispatching them one at a time — the same §19 amortization
+(one stacked program per bucket instead of one dispatch chain per
+request), now paid for by a *scheduler* rather than an offline planner.
+
+Methodology: a closed-loop load of concurrent clients (each submits,
+awaits its result, submits the next) drives one in-process
+:class:`~repro.serve.service.AsyncSolveService` through a mixed
+workload — sparse-deconvolution stamps over four shape signatures plus
+SCDL and low-rank completion instances, so coalescing must handle
+multiple lanes (workload x config) and multiple buckets per lane.  Two
+service configurations over the identical request sequence:
+
+- **serialized** — ``max_batch=1`` (coalescing off): every request is
+  its own dispatch on the single worker; this is the one-at-a-time
+  baseline a naive frontend would run.
+- **batched** — ``batch_window_s`` deadline + ``max_batch=32``: the
+  scheduler coalesces whatever the closed loop has in flight.
+
+Both runs include compile time (that IS the fixed cost coalescing
+amortizes).  Every batched-run request is then checked for trajectory
+parity (rtol 1e-4) against a direct ``solve()`` reference, and p50/p99
+request latency is reported from the service metrics.
+
+Acceptance gate (full run only): batched >= 2x requests/sec.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.core.problem import solve
+from repro.serve import AsyncSolveService, ServeConfig, SolveRequest
+
+CHUNK = 8
+
+
+def _deconv_cfg(iters):
+    from repro.imaging.condat import SolverConfig
+    return SolverConfig(mode="sparse", max_iter=iters, tol=0.0,
+                        n_scales=2)
+
+
+def _workload(n_deconv: int, n_scdl: int, n_lowrank: int, iters: int):
+    """(problem, inputs, cfg) triples: deconvolution over the four
+    §19 shape combos plus two non-imaging lanes."""
+    from repro.imaging import psf as psf_op
+    from repro.imaging.lowrank import CompletionConfig
+    from repro.imaging.scdl import SCDLConfig
+    out = []
+    combos = [(3, 16), (5, 16), (4, 20), (6, 20)]
+    dcfg = _deconv_cfg(iters)
+    for i in range(n_deconv):
+        n, S = combos[i % len(combos)]
+        d = psf_op.simulate(n, jax.random.PRNGKey(i), stamp=S)
+        out.append(("deconvolve", (d.Y, d.psfs), dcfg))
+    scfg = SCDLConfig(n_atoms=6, max_iter=iters, tol=0.0)
+    for i in range(n_scdl):
+        r = np.random.default_rng(100 + i)
+        out.append(("scdl",
+                    (r.normal(size=(25, 20)).astype(np.float32),
+                     r.normal(size=(16, 20)).astype(np.float32)), scfg))
+    lcfg = CompletionConfig(rank=4, max_iter=iters, tol=0.0)
+    for i in range(n_lowrank):
+        r = np.random.default_rng(200 + i)
+        Y = (r.normal(size=(8, 3)) @ r.normal(size=(3, 10))).astype(
+            np.float32)
+        M = (r.random((8, 10)) < 0.6).astype(np.float32)
+        out.append(("lowrank", (Y, M), lcfg))
+    return out
+
+
+async def _closed_loop(service, work, clients: int):
+    """Closed-loop drive: ``clients`` concurrent workers each pull the
+    next request off the shared sequence, submit, and block on its
+    result.  Returns the finished records in ``work`` order."""
+    queue = list(enumerate(work))
+    results = [None] * len(work)
+
+    async def client():
+        while queue:
+            idx, (problem, inputs, cfg) = queue.pop(0)
+            rec = await service.submit(SolveRequest(
+                problem, inputs, cfg=cfg,
+                options=dict(chunk=CHUNK, cost_every=1)))
+            results[idx] = await service.result(rec.id, timeout=600)
+
+    await asyncio.gather(*[client() for _ in range(clients)])
+    return results
+
+
+async def _drive(config, work, clients):
+    async with AsyncSolveService(config) as svc:
+        t0 = time.perf_counter()
+        recs = await _closed_loop(svc, work, clients)
+        dt = time.perf_counter() - t0
+        return recs, dt, svc.metrics.snapshot()
+
+
+def run(n_deconv: int = 16, n_scdl: int = 4, n_lowrank: int = 4,
+        iters: int = 16, clients: int = 8, smoke: bool = False) -> None:
+    if smoke:
+        n_deconv, n_scdl, n_lowrank, iters, clients = 6, 2, 0, 8, 4
+    work = _workload(n_deconv, n_scdl, n_lowrank, iters)
+    total = len(work)
+
+    serial_cfg = ServeConfig(max_batch=1, batch_window_s=0.0, workers=1)
+    batched_cfg = ServeConfig(max_batch=32, batch_window_s=0.25,
+                              workers=1, waste_budget=0.5)
+    serial_recs, dt_serial, _ = asyncio.run(
+        _drive(serial_cfg, work, clients))
+    batched_recs, dt_batched, m = asyncio.run(
+        _drive(batched_cfg, work, clients))
+
+    # every batched request reproduces its direct solve() trajectory
+    for (problem, inputs, cfg), rec in zip(work, batched_recs):
+        assert rec.status == "done", rec.public()
+        ref = solve(problem, *inputs, cfg=cfg, chunk=CHUNK, cost_every=1)
+        np.testing.assert_allclose(np.asarray(rec.solution.log.costs),
+                                   np.asarray(ref.log.costs), rtol=1e-4)
+
+    serial_rps = total / dt_serial
+    batched_rps = total / dt_batched
+    speedup = batched_rps / serial_rps
+    occupancy = m["batch_occupancy"]
+    records = [{
+        "name": f"serve/mixed_x{total}_clients{clients}",
+        "requests": total,
+        "clients": clients,
+        "iters": iters,
+        "serial_s": round(dt_serial, 3),
+        "batched_s": round(dt_batched, 3),
+        "serial_rps": round(serial_rps, 3),
+        "batched_rps": round(batched_rps, 3),
+        "speedup": round(speedup, 3),
+        "batch_occupancy_mean": occupancy["mean"],
+        "batch_occupancy_max": occupancy["max"],
+        "latency_p50_s": m["latency_s"].get("p50"),
+        "latency_p99_s": m["latency_s"].get("p99"),
+        "traj_match": True,
+    }]
+    print("BENCH " + json.dumps(records[0]), flush=True)
+    emit(f"serve/mixed_x{total}_clients{clients}",
+         dt_batched / total * 1e6, f"speedup={speedup:.3f}")
+    if not smoke:
+        # the acceptance gate: coalescing >= 2x requests/sec
+        assert speedup >= 2.0, records
+        assert occupancy["max"] > 1, records
+    write_bench_json("BENCH_serve.json", records)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -1,6 +1,6 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,driver,api,deconv]
+    PYTHONPATH=src python -m benchmarks.run [--only psf,scdl,memory,driver,api,deconv,many,serve]
                                             [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
@@ -18,7 +18,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
-                    default="psf,scdl,memory,driver,api,deconv,many")
+                    default="psf,scdl,memory,driver,api,deconv,many,serve")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     wanted = set(args.only.split(","))
@@ -33,7 +33,8 @@ def main() -> None:
         _run(lambda: bench_scdl.run(smoke=args.smoke), "scdl", failures)
     if "memory" in wanted:
         from benchmarks import bench_memory
-        _run(bench_memory.run, "memory", failures)
+        _run(lambda: bench_memory.run(smoke=args.smoke), "memory",
+             failures)
     if "driver" in wanted:
         from benchmarks import bench_driver
         _run(lambda: bench_driver.run(smoke=args.smoke), "driver",
@@ -48,6 +49,10 @@ def main() -> None:
     if "many" in wanted:
         from benchmarks import bench_many
         _run(lambda: bench_many.run(smoke=args.smoke), "many", failures)
+    if "serve" in wanted:
+        from benchmarks import bench_serve
+        _run(lambda: bench_serve.run(smoke=args.smoke), "serve",
+             failures)
     if failures:
         print(f"# FAILED tables: {failures}", file=sys.stderr)
         raise SystemExit(1)

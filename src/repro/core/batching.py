@@ -201,6 +201,136 @@ def plan_buckets(instances: Sequence[Sequence], axes: BatchAxes, *,
 
 
 # --------------------------------------------------------------------
+# Incremental (open-bucket) planning — the serving admission question
+# --------------------------------------------------------------------
+
+class OpenBucket:
+    """One still-admitting bucket of an :class:`OpenBucketPlanner`.
+
+    Unlike :func:`plan_buckets` (which sees the whole population and
+    packs largest-first, so a bucket's capacity is fixed at its first
+    member), an open bucket admits members in *arrival* order: its
+    capacity grows to the largest member seen so far, and every
+    admission re-checks the waste rule under the candidate capacity —
+    the same ``pad <= waste_budget * capacity * n_members`` boundary
+    the offline planner uses (exactly-at-budget admits; one-over opens
+    a new bucket).
+    """
+
+    __slots__ = ("signature", "capacity", "members", "waste_budget",
+                 "max_members")
+
+    def __init__(self, signature: Tuple, waste_budget: float,
+                 max_members: Optional[int] = None):
+        self.signature = signature
+        self.capacity = 0
+        self.members: List[Tuple[Any, int]] = []   # (token, records)
+        self.waste_budget = float(waste_budget)
+        self.max_members = max_members
+
+    def try_admit(self, token, records: int) -> bool:
+        """Admit ``token`` if the post-admission padding fraction stays
+        within the waste budget (capacity may grow to ``records``)."""
+        if self.max_members is not None \
+                and len(self.members) >= self.max_members:
+            return False
+        cap = max(self.capacity, int(records))
+        pad = sum(cap - n for _, n in self.members) + (cap - records)
+        if pad > self.waste_budget * cap * (len(self.members) + 1):
+            return False
+        self.capacity = cap
+        self.members.append((token, int(records)))
+        return True
+
+    def remove(self, token) -> bool:
+        """Withdraw a member (request cancellation); the capacity
+        shrinks back to the largest remaining member."""
+        for j, (t, _) in enumerate(self.members):
+            if t == token:
+                del self.members[j]
+                self.capacity = max((n for _, n in self.members),
+                                    default=0)
+                return True
+        return False
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+
+class OpenBucketPlanner:
+    """Streaming counterpart of :func:`plan_buckets` (DESIGN.md §20).
+
+    A serving frontend cannot plan over the whole population — requests
+    arrive one at a time and the scheduler's question is incremental:
+    *can this request ride an already-open bucket within the waste
+    budget, or does it open a new one?*  ``offer`` answers it with the
+    same signature-grouping and padding rule as the offline planner;
+    ``close`` seals an open bucket into a :class:`Bucket` whose key is
+    computed by the same :func:`bucket_key` (membership is sorted, so
+    the key is independent of arrival order).
+
+    Tokens are caller-chosen hashable ids (the service uses monotonic
+    ints, so ``Bucket.indices`` ordering matches admission order after
+    the sort).  The planner is not thread-safe; the asyncio service
+    drives it from its event loop only.
+    """
+
+    def __init__(self, axes: BatchAxes, *, waste_budget: float = 0.25,
+                 salt: str = "", max_members: Optional[int] = None):
+        if not 0.0 <= waste_budget < 1.0:
+            raise ValueError(
+                f"waste_budget must be in [0, 1), got {waste_budget}")
+        self.axes = axes
+        self.waste_budget = float(waste_budget)
+        self.salt = salt
+        self.max_members = max_members
+        self._open: List[OpenBucket] = []
+
+    def offer(self, token, instance: Sequence) -> OpenBucket:
+        """Place one instance: first open bucket of matching signature
+        with budget headroom, else a fresh bucket.  Returns the (still
+        open) bucket the instance joined."""
+        n = instance_records(instance, self.axes)
+        sig = static_signature(instance, self.axes)
+        if not self.axes.pad_records:
+            sig = sig + (("records", n),)
+        for b in self._open:
+            if b.signature == sig and b.try_admit(token, n):
+                return b
+        b = OpenBucket(sig, self.waste_budget, self.max_members)
+        b.try_admit(token, n)       # sole member: pad 0, always admits
+        self._open.append(b)
+        return b
+
+    def discard(self, bucket: OpenBucket, token) -> None:
+        """Withdraw a member; an emptied bucket closes unreported."""
+        bucket.remove(token)
+        if not bucket.members and bucket in self._open:
+            self._open.remove(bucket)
+
+    def close(self, bucket: OpenBucket) -> Bucket:
+        """Seal an open bucket for dispatch.  The resulting key matches
+        what :func:`plan_buckets` would emit for the same membership."""
+        self._open.remove(bucket)
+        items = sorted(bucket.members)
+        return Bucket(
+            key=bucket_key(self.salt, bucket.signature, bucket.capacity,
+                           items),
+            capacity=bucket.capacity,
+            indices=tuple(t for t, _ in items),
+            records=tuple(n for _, n in items),
+            signature=bucket.signature)
+
+    def drain(self) -> List[Bucket]:
+        """Close every open bucket (service shutdown / deadline flush)."""
+        return [self.close(b) for b in list(self._open)]
+
+    @property
+    def open_buckets(self) -> Tuple[OpenBucket, ...]:
+        return tuple(self._open)
+
+
+# --------------------------------------------------------------------
 # Stacking helpers (operate on already-built per-instance bundles)
 # --------------------------------------------------------------------
 

@@ -82,6 +82,14 @@ class RunOptions:
     # divergence rollback, recovery report.  None = unsupervised; the
     # disabled path adds zero dispatches or host transfers.
     resilience: Optional[ResilienceConfig] = None
+    # per-chunk observability hook (repro.serve, DESIGN.md §20): called
+    # at every chunk-boundary host sync with a progress-event dict —
+    # iteration range, evaluated costs, wall time, convergence state
+    # (and per-instance entries for batched runs).  The callback runs on
+    # the driver's thread at an already-paid sync point, so a cheap
+    # callback adds no dispatches; exceptions propagate and abort the
+    # run (relays must do their own shielding).
+    progress_fn: Optional[Callable] = None
     # step wiring
     step_fn_light: Optional[Callable] = None
     step_fn_cost: Optional[Callable] = None
@@ -114,6 +122,22 @@ class RunOptions:
 _RUN_OPTION_NAMES = tuple(f.name for f in fields(RunOptions))
 
 
+def percentiles(values, qs=(50, 90, 99)) -> Dict[str, float]:
+    """``{"p50": ..., "p90": ..., "p99": ...}`` summary of a sample.
+
+    The one timing-summary helper shared by :meth:`RunLog.percentiles`
+    (per-iteration wall times a run already records) and the serving
+    metrics registry (request latencies, ``repro.serve.metrics``) — so
+    a ``Solution`` and a server report the same statistic the same way.
+    Empty input returns an empty dict rather than NaNs.
+    """
+    vals = np.asarray(list(values), dtype=np.float64)
+    if vals.size == 0:
+        return {}
+    return {f"p{int(q) if float(q).is_integer() else q}":
+            float(np.percentile(vals, q)) for q in qs}
+
+
 @dataclass
 class RunLog:
     costs: List[float] = field(default_factory=list)
@@ -128,6 +152,13 @@ class RunLog:
     @property
     def total_seconds(self) -> float:
         return float(np.sum(self.times)) if self.times else 0.0
+
+    def percentiles(self, qs=(50, 90, 99)) -> Dict[str, float]:
+        """Percentile summary (seconds) of the per-iteration wall times
+        this log already records — the per-chunk dt is amortized over
+        the chunk's iterations, so p50/p99 read as time-per-iteration.
+        Empty log -> empty dict."""
+        return percentiles(self.times, qs)
 
 
 class IterativeDriver:
@@ -174,6 +205,7 @@ class IterativeDriver:
         self.checkpoint_every = options.checkpoint_every
         self.checkpoint_fn = options.checkpoint_fn
         self.checks = options.checks
+        self.progress_fn = options.progress_fn
         # a chunk longer than the whole run would compile a scan program
         # that only ever executes its shorter tail — clamp so the one
         # program that runs is the one that was asked for
@@ -332,6 +364,16 @@ class IterativeDriver:
         anyway, so they use the plain path."""
         return self._per_chunk and self.chunk > 1
 
+    def _progress_event(self, start: int, k: int, dt: float) -> dict:
+        """One chunk-boundary progress event (``RunOptions.progress_fn``,
+        DESIGN.md §20): iteration range just completed, the newest
+        evaluated objective, wall time, and the convergence verdict."""
+        return {"kind": "chunk", "start": int(start), "iters": int(k),
+                "done": int(start + k),
+                "cost": (self.log.costs[-1] if self.log.costs else None),
+                "dt_s": float(dt),
+                "converged_at": self.log.converged_at}
+
     def _dispatch_chunk(self, data, rep, last, i: int, k: int):
         """One fused-chunk dispatch + its host sync, as a unit the
         resilience supervisor can retry (the ``dispatch`` chaos fault
@@ -409,9 +451,19 @@ class IterativeDriver:
                 self.checkpoint_fn(
                     self.bundle.with_data(data, replicated=rep), i + k - 1)
             i += k
-            if self._converged():
+            # a local verdict, not `converged_at is not None`: a rerun of
+            # a warmed driver (benchmarks' timed_round) must not break on
+            # a previous run's convergence record
+            conv = self._converged()
+            if conv:
                 self.log.converged_at = i - 1
+            if self.progress_fn is not None:
+                self.progress_fn(self._progress_event(i - k, k, dt))
+            if conv:
                 break
+        # accumulate across reruns of a warmed driver, mirroring the
+        # batched driver's per-instance counter
+        self.log.iters_run = (self.log.iters_run or 0) + (i - start_iter)
         if sup is not None:
             self.recovery = sup.finalize()
         return self.bundle.with_data(data, replicated=rep)
@@ -419,6 +471,7 @@ class IterativeDriver:
     def _run_per_step(self, start_iter: int) -> Bundle:
         data, rep = self.bundle.data, self.bundle.replicated
         ema = None
+        n_done = 0
         for i in range(start_iter, self.max_iter):
             t0 = time.perf_counter()
             if _chaos.is_active():  # unsupervised: a fault kills the run
@@ -464,9 +517,15 @@ class IterativeDriver:
                     and (i + 1) % self.checkpoint_every == 0):
                 self.checkpoint_fn(
                     self.bundle.with_data(data, replicated=rep), i)
-            if self._converged():
+            n_done += 1
+            conv = self._converged()
+            if conv:
                 self.log.converged_at = i
+            if self.progress_fn is not None:
+                self.progress_fn(self._progress_event(i, 1, dt))
+            if conv:
                 break
+        self.log.iters_run = (self.log.iters_run or 0) + n_done
         return self.bundle.with_data(data, replicated=rep)
 
 
@@ -522,6 +581,7 @@ class BatchedDriver:
         self.cost_window = options.cost_window
         self.checkpoint_fn = options.checkpoint_fn
         self.checks = options.checks
+        self.progress_fn = options.progress_fn
         self.chunk = max(min(int(options.chunk),
                              max(int(options.max_iter), 1)), 1)
         self.checkpoint_every = options.checkpoint_every
@@ -642,6 +702,27 @@ class BatchedDriver:
                 self.active[row] = False
                 self.converged_at[row] = i + k - 1
                 log.converged_at = i + k - 1
+
+    def _progress_event(self, start: int, k: int, dt: float) -> dict:
+        """Chunk-boundary progress event with a per-instance section
+        keyed by the caller's original instance index.  Lanes retired by
+        re-compaction no longer appear — their final state was already
+        reported in the chunk event that marked them converged."""
+        inst = {}
+        for row in self.slots:
+            row = int(row)
+            j = int(self.orig[row])
+            if j < 0:
+                continue                         # mesh-alignment filler
+            log = self.logs[row]
+            inst[j] = {"cost": (log.costs[-1] if log.costs else None),
+                       "iters_run": int(self.iters_run[row]),
+                       "converged_at": (int(self.converged_at[row])
+                                        if self.converged_at[row] >= 0
+                                        else None)}
+        return {"kind": "chunk", "start": int(start), "iters": int(k),
+                "done": int(start + k), "dt_s": float(dt),
+                "instances": inst}
 
     # ---------------------------------------------------- re-compaction
     def _maybe_recompact(self) -> None:
@@ -788,6 +869,8 @@ class BatchedDriver:
                     > i // self.checkpoint_every):
                 self.checkpoint_fn(self.snapshot_payload(), i + k - 1)
             i += k
+            if self.progress_fn is not None:
+                self.progress_fn(self._progress_event(i - k, k, dt))
             self._maybe_recompact()
         if sup is not None:
             self.recovery = sup.finalize()

@@ -159,6 +159,12 @@ class Solution:
     def costs(self):
         return self.log.costs
 
+    def percentiles(self, qs=(50, 90, 99)) -> Dict[str, float]:
+        """p50/p90/p99 (seconds) over the per-iteration wall times the
+        run recorded — the same summary the serving metrics registry
+        reports for request latencies (``RunLog.percentiles``)."""
+        return self.log.percentiles(qs)
+
 
 # --------------------------------------------------------------------
 # Workload registry
@@ -221,7 +227,7 @@ def available() -> Tuple[str, ...]:
 _RUN_CONTROL_KEYS = ("max_iter", "tol", "chunk", "cost_every",
                      "cost_window", "straggler_factor",
                      "checkpoint_every", "checkpoint_fn", "checks",
-                     "resilience")
+                     "resilience", "progress_fn")
 
 
 def derive_options(problem: Problem, base: RunOptions) -> RunOptions:

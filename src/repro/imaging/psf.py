@@ -200,7 +200,12 @@ def spectral_norm(psfs: jax.Array, iters: int = 60, key=None,
     v = jax.random.normal(kv, psfs.shape)
     # the whole iteration is one jitted program (module-level cache):
     # eagerly, lax.scan re-traces its closure body on every call, which
-    # made this the dominant per-instance setup cost for populations
+    # made this the dominant per-instance setup cost for populations.
+    # Concurrent serve workers may race a cold call: jax's compilation
+    # cache is internally locked, the function is pure, and its inputs
+    # here are deterministic per (shape, key), so the worst case is one
+    # duplicated compile, not a wrong value (regression-tested by
+    # tests/test_serve.py::test_concurrent_setup_thread_safety).
     return float(_power_norm(u, v, kf_pair, iters))
 
 

@@ -13,6 +13,7 @@ stamp the difference is negligible (documented deviation).
 """
 from __future__ import annotations
 
+import threading
 from functools import lru_cache, partial
 
 import jax
@@ -20,6 +21,10 @@ import jax.numpy as jnp
 
 # B3-spline scaling kernel
 _K = jnp.array([1.0, 4.0, 6.0, 4.0, 1.0]) / 16.0
+
+# serializes cold misses of the memoized default-key spectral norm so
+# concurrent serve workers never duplicate the 30-step power iteration
+_DEFAULT_NORM_LOCK = threading.Lock()
 
 
 def _smooth_axis(img: jax.Array, axis: int, step: int) -> jax.Array:
@@ -91,10 +96,18 @@ def spectral_norm(n_scales: int, shape=(41, 41), iters: int = 30,
     data — so the default-key estimate is memoized: a population of
     same-shape instances (``solve_many``, or a loop of ``solve`` calls)
     pays the 30-step iteration once, not per instance.
+
+    Serving workers (``repro.serve``) hit this from concurrent threads.
+    ``lru_cache`` itself is safe (its dict updates hold the GIL, and the
+    computation is deterministic, so a duplicate-miss race would still
+    be value-idempotent) — but each racing miss would trace and run the
+    full 30-step power iteration, exactly the per-instance setup cost
+    the memoization exists to kill, so cold misses are serialized.
     """
     if key is None:
-        return _spectral_norm_default(int(n_scales), tuple(shape),
-                                      int(iters))
+        with _DEFAULT_NORM_LOCK:
+            return _spectral_norm_default(int(n_scales), tuple(shape),
+                                          int(iters))
     return _spectral_norm_impl(n_scales, shape, iters, key)
 
 

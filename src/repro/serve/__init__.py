@@ -1,0 +1,20 @@
+"""repro.serve — async batched solve-as-a-service frontend (DESIGN.md §20).
+
+The serving layer the paper's architecture implies: an asyncio core
+(:class:`AsyncSolveService`) that admits, coalesces and batches solve
+requests onto :func:`repro.core.problem.solve_many`, plus a stdlib-only
+JSON-over-HTTP transport (``serve.server``) and client (``serve.client``).
+
+    from repro.serve import AsyncSolveService, ServeConfig, SolveRequest
+    from repro.serve.server import serve_http, ServiceRunner
+    from repro.serve.client import ServeClient
+"""
+from repro.serve.metrics import Metrics
+from repro.serve.service import (AsyncSolveService, RequestRecord,
+                                 RequestRejected, ServeConfig,
+                                 SolveRequest)
+
+__all__ = [
+    "AsyncSolveService", "Metrics", "RequestRecord", "RequestRejected",
+    "ServeConfig", "SolveRequest",
+]

@@ -1,0 +1,497 @@
+"""AsyncSolveService: the framework-agnostic serving core (DESIGN.md §20).
+
+The paper's architecture *serves* imaging workloads; this module is the
+traffic side of that claim.  One asyncio event loop owns all scheduling
+state (no locks on the hot path); actual solves run on a small worker
+executor so the loop stays responsive:
+
+- **submit** — admission control first: a draining service or a full
+  queue rejects with a *retriable* status (the client's signal to back
+  off or go elsewhere), everything else is enqueued for coalescing.
+- **micro-batch scheduler** — requests are grouped by a compatibility
+  key (workload + config fingerprint + run-option fingerprint) and then
+  offered to an incremental :class:`~repro.core.batching.OpenBucketPlanner`
+  (same static-signature grouping and waste-budget rule as the offline
+  ``solve_many`` planner).  The first request into an open bucket arms a
+  deadline timer (``batch_window_s``); the bucket dispatches when the
+  window expires, when it reaches ``max_batch`` occupancy, or when a
+  drain flushes it — whichever comes first.
+- **dispatch** — a closed bucket runs as ONE ``solve_many`` call (a
+  single-member bucket takes the plain ``solve`` path) on the executor,
+  with per-request ``RunOptions`` — including ``resilience=`` — passed
+  straight through.  The driver's ``progress_fn`` chunk events are
+  relayed onto the loop and fanned out per request, so clients can
+  stream per-chunk progress while the batch runs.
+- **drain** — stop admitting, *reject* still-queued requests with the
+  retriable status, let in-flight batches finish.  ``close()`` drains
+  and tears down the executor.
+
+A request carrying ``chaos_spec`` (the §18 fault-injection drill)
+always dispatches as its own singleton batch: chaos activation is
+process-global, so an injected fault must never share a dispatch with
+paying traffic.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+import time
+import uuid
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import batching
+from repro.core.problem import Solution, _as_problem, \
+    _config_fingerprint, solve, solve_many
+from repro.serve.metrics import Metrics
+
+#: terminal request states — once here, a record never changes again
+TERMINAL = ("done", "failed", "cancelled", "rejected")
+#: every state a record can be in
+STATES = ("queued", "running") + TERMINAL
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Service-level knobs (per-request solver knobs ride each
+    :class:`SolveRequest` instead).
+
+    - ``max_queue`` — admission-control cap on queued+running requests;
+      beyond it, submits are rejected retriable (closed-loop clients
+      back off, the paper's Spark analogue would spill to another
+      executor).
+    - ``batch_window_s`` — coalescing deadline: how long the first
+      request in an open bucket waits for compatible companions before
+      the bucket dispatches anyway.  0 disables coalescing (every
+      request dispatches solo — the serialized baseline of
+      ``benchmarks/bench_serve``).
+    - ``max_batch`` — occupancy that dispatches an open bucket early.
+    - ``workers`` — executor threads running solves.  The default of 1
+      serializes device work (one process-wide accelerator); >1 only
+      helps when solves block on I/O or separate devices.
+    - ``waste_budget`` — open-bucket padding budget (see
+      ``core.batching``); serving defaults looser than ``solve_many``'s
+      0.25 because coalescing wins usually beat padding waste.
+    """
+    max_queue: int = 256
+    batch_window_s: float = 0.05
+    max_batch: int = 32
+    workers: int = 1
+    waste_budget: float = 0.5
+    history_window: int = 2048
+
+
+@dataclass(frozen=True)
+class SolveRequest:
+    """One client request: exactly the arguments of a ``solve()`` call.
+
+    ``options`` holds run-control overrides (``max_iter``, ``tol``,
+    ``chunk``, ``cost_every``, ``resilience=ResilienceConfig(...)``,
+    ...); step wiring is always derived from the Problem declaration.
+    ``chaos_spec`` arms the §18 fault-injection harness for this request
+    only (dispatched solo, see module docstring).
+    """
+    problem: str
+    inputs: Tuple[Any, ...]
+    cfg: Any = None
+    options: Dict[str, Any] = field(default_factory=dict)
+    chaos_spec: Optional[str] = None
+
+
+@dataclass
+class RequestRecord:
+    """Mutable server-side state of one request.
+
+    Written by the service loop and (status/timestamps/result fields)
+    by the executor worker running its batch; read by transports.
+    ``retriable`` is only meaningful with status ``"rejected"``: the
+    request never ran and can be resubmitted verbatim.
+    """
+    id: str
+    request: SolveRequest
+    status: str = "queued"
+    retriable: bool = False
+    error: Optional[str] = None
+    solution: Optional[Solution] = None
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    batch_size: int = 0
+    bucket_key: Optional[str] = None
+    events: List[dict] = field(default_factory=list)
+    # loop-side plumbing (not part of the public record)
+    done: asyncio.Event = field(default_factory=asyncio.Event, repr=False)
+    _waiters: List[asyncio.Future] = field(default_factory=list,
+                                           repr=False)
+    _token: Optional[int] = field(default=None, repr=False)
+    _open: Optional[batching.OpenBucket] = field(default=None, repr=False)
+    _lane: Optional["_Lane"] = field(default=None, repr=False)
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    def public(self) -> dict:
+        """JSON-ready status view (no arrays, no Solution)."""
+        return {
+            "id": self.id, "status": self.status,
+            "retriable": self.retriable, "error": self.error,
+            "problem": self.request.problem,
+            "batch_size": self.batch_size,
+            "bucket_key": self.bucket_key,
+            "submitted_at": self.submitted_at,
+            "started_at": self.started_at,
+            "finished_at": self.finished_at,
+            "latency_s": self.latency_s,
+            "n_events": len(self.events),
+        }
+
+
+class _Lane:
+    """All open buckets of one compatibility key (workload + config +
+    run options): requests only coalesce within a lane."""
+
+    def __init__(self, key: str, problem, axes: batching.BatchAxes,
+                 planner: batching.OpenBucketPlanner):
+        self.key = key
+        self.problem = problem          # prototype Problem instance
+        self.axes = axes
+        self.planner = planner
+        # open bucket -> (records in admission order, deadline timer)
+        self.pending: Dict[int, Tuple[batching.OpenBucket,
+                                      List[RequestRecord], Any]] = {}
+
+
+class RequestRejected(RuntimeError):
+    """Raised by :meth:`AsyncSolveService.submit` at admission time.
+    ``retriable`` mirrors the record's flag: the request never ran."""
+
+    def __init__(self, msg: str, record: RequestRecord):
+        super().__init__(msg)
+        self.record = record
+        self.retriable = record.retriable
+
+
+class AsyncSolveService:
+    """The asyncio serving core.  All public coroutines must run on the
+    loop that called :meth:`start`; transports on other threads bridge
+    via ``asyncio.run_coroutine_threadsafe`` (see ``serve.server``)."""
+
+    def __init__(self, config: Optional[ServeConfig] = None, *,
+                 mesh=None):
+        self.cfg = config or ServeConfig()
+        self.mesh = mesh
+        self.metrics = Metrics(window=self.cfg.history_window)
+        self.records: Dict[str, RequestRecord] = {}
+        self._lanes: Dict[str, _Lane] = {}
+        self._inflight: Dict[int, asyncio.Future] = {}
+        self._draining = False
+        self._closed = False
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._executor = ThreadPoolExecutor(
+            max_workers=max(int(self.cfg.workers), 1),
+            thread_name_prefix="repro-serve")
+        self._tokens = itertools.count()
+
+    # ----------------------------------------------------------- setup
+    async def start(self) -> "AsyncSolveService":
+        self._loop = asyncio.get_running_loop()
+        return self
+
+    async def __aenter__(self) -> "AsyncSolveService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    # ------------------------------------------------------- admission
+    async def submit(self, request: SolveRequest) -> RequestRecord:
+        """Admit one request: returns its (live) record, or raises
+        :class:`RequestRejected` — with ``retriable=True`` when the
+        refusal is load/drain-shaped rather than malformed input."""
+        assert self._loop is not None, \
+            "AsyncSolveService.submit before start()"
+        self.metrics.incr("submitted")
+        rec = RequestRecord(id=uuid.uuid4().hex[:12], request=request,
+                            submitted_at=time.time())
+        if self._draining or self._closed:
+            return self._reject(rec, "service is draining",
+                                retriable=True)
+        depth = self.metrics.queue_depth
+        if depth >= self.cfg.max_queue:
+            return self._reject(
+                rec, f"queue full ({depth} >= max_queue="
+                     f"{self.cfg.max_queue})", retriable=True)
+        # malformed requests fail loudly at admission, not in the batch:
+        # building the prototype Problem validates workload key + config
+        try:
+            problem = _as_problem(request.problem, request.cfg)
+            lane_key = self._lane_key(problem, request)
+        except Exception as e:
+            rec.error = f"{type(e).__name__}: {e}"
+            return self._reject(rec, rec.error, retriable=False)
+        self.records[rec.id] = rec
+        self.metrics.incr("accepted")
+        self.metrics.queue_delta(+1)
+        if request.chaos_spec or self.cfg.batch_window_s <= 0 \
+                or self.cfg.max_batch <= 1:
+            self._dispatch([rec], problem, bucket_key=None)
+            return rec
+        self._enqueue(rec, problem, lane_key)
+        return rec
+
+    def _reject(self, rec: RequestRecord, why: str,
+                *, retriable: bool) -> RequestRecord:
+        rec.status = "rejected"
+        rec.retriable = retriable
+        rec.error = rec.error or why
+        rec.finished_at = time.time()
+        rec.done.set()
+        self.metrics.incr("rejected")
+        self.records[rec.id] = rec
+        raise RequestRejected(why, rec)
+
+    def _lane_key(self, problem, request: SolveRequest) -> str:
+        """Compatibility key: requests coalesce only when the same
+        Problem (by config fingerprint) runs under the same run options
+        — one ``RunOptions`` drives a whole ``solve_many`` call."""
+        opts = ";".join(f"{k}={request.options[k]!r}"
+                        for k in sorted(request.options))
+        return (f"{request.problem}|{_config_fingerprint(problem)}|"
+                f"{opts}")
+
+    # ------------------------------------------------------ scheduling
+    def _enqueue(self, rec: RequestRecord, problem, lane_key: str) -> None:
+        lane = self._lanes.get(lane_key)
+        if lane is None:
+            axes = problem.batch_axes()
+            salt = f"{lane_key}"
+            lane = _Lane(lane_key, problem, axes,
+                         batching.OpenBucketPlanner(
+                             axes, waste_budget=self.cfg.waste_budget,
+                             salt=salt, max_members=self.cfg.max_batch))
+            self._lanes[lane_key] = lane
+        token = next(self._tokens)
+        bucket = lane.planner.offer(token, rec.request.inputs)
+        rec._token, rec._open, rec._lane = token, bucket, lane
+        entry = lane.pending.get(id(bucket))
+        if entry is None:
+            # first member arms the coalescing deadline
+            timer = self._loop.call_later(
+                self.cfg.batch_window_s, self._flush_bucket, lane,
+                id(bucket))
+            lane.pending[id(bucket)] = (bucket, [rec], timer)
+        else:
+            entry[1].append(rec)
+        if len(bucket) >= self.cfg.max_batch:
+            self._flush_bucket(lane, id(bucket))
+
+    def _flush_bucket(self, lane: _Lane, bucket_id: int) -> None:
+        entry = lane.pending.pop(bucket_id, None)
+        if entry is None:
+            return                       # already flushed or cancelled
+        bucket, recs, timer = entry
+        timer.cancel()
+        closed = lane.planner.close(bucket)
+        # solve_many receives instances in bucket order; map each back
+        token_to_rec = {r._token: r for r in recs}
+        ordered = [token_to_rec[t] for t in closed.indices]
+        for r in ordered:
+            r._open = r._lane = None
+            r.bucket_key = closed.key
+        self._dispatch(ordered, lane.problem, bucket_key=closed.key)
+
+    def _dispatch(self, recs: List[RequestRecord], problem,
+                  *, bucket_key: Optional[str]) -> None:
+        for r in recs:
+            r.batch_size = len(recs)
+        self.metrics.record_batch(len(recs))
+        fut = self._loop.run_in_executor(
+            self._executor, self._run_batch, recs, problem)
+        key = id(fut)
+        self._inflight[key] = fut
+        fut.add_done_callback(
+            lambda f, _recs=recs: self._on_batch_done(key, _recs, f))
+
+    # -------------------------------------------------- executor side
+    def _run_batch(self, recs: List[RequestRecord], problem) -> None:
+        """Runs on a worker thread: one solve()/solve_many() for the
+        whole batch, progress relayed to the loop per request."""
+        loop = self._loop
+        now = time.time()
+        for r in recs:
+            r.status = "running"
+            r.started_at = now
+
+        if len(recs) == 1:
+            rec = recs[0]
+
+            def relay_single(event, _rec=rec):
+                loop.call_soon_threadsafe(self._push_event, _rec, event)
+
+            sols = [self._solve_one(rec, problem, relay_single)]
+        else:
+            def relay_batch(event):
+                base = {k: v for k, v in event.items()
+                        if k != "instances"}
+                for j, st in event.get("instances", {}).items():
+                    loop.call_soon_threadsafe(
+                        self._push_event, recs[j], {**base, **st})
+
+            opts = dict(recs[0].request.options)
+            sols = solve_many(
+                problem, [r.request.inputs for r in recs],
+                mesh=self.mesh, waste_budget=self.cfg.waste_budget,
+                progress_fn=relay_batch, **opts)
+        for r, s in zip(recs, sols):
+            r.solution = s
+
+    def _solve_one(self, rec: RequestRecord, problem, relay) -> Solution:
+        from repro.resilience import chaos
+        opts = dict(rec.request.options)
+        spec = rec.request.chaos_spec
+        ctx = chaos.active_chaos(chaos.ChaosConfig.parse(spec)) \
+            if spec else None
+        if ctx is None:
+            return solve(problem, *rec.request.inputs, mesh=self.mesh,
+                         progress_fn=relay, **opts)
+        with ctx:
+            return solve(problem, *rec.request.inputs, mesh=self.mesh,
+                         progress_fn=relay, **opts)
+
+    # ------------------------------------------------------- loop side
+    def _push_event(self, rec: RequestRecord, event: dict) -> None:
+        if rec.status in TERMINAL:
+            return
+        rec.events.append(event)
+        self._wake_waiters(rec)
+
+    def _wake_waiters(self, rec: RequestRecord) -> None:
+        for w in rec._waiters:
+            if not w.done():
+                w.set_result(None)
+        rec._waiters.clear()
+
+    def _on_batch_done(self, key: int, recs: List[RequestRecord],
+                       fut) -> None:
+        self._inflight.pop(key, None)
+        err = fut.exception()
+        now = time.time()
+        for r in recs:
+            if r.status in TERMINAL:
+                continue
+            r.finished_at = now
+            if err is not None:
+                r.status = "failed"
+                r.error = f"{type(err).__name__}: {err}"
+                self.metrics.incr("failed")
+            else:
+                r.status = "done"
+                self.metrics.incr("completed")
+                self.metrics.record_latency(r.latency_s)
+            self.metrics.queue_delta(-1)
+            r.done.set()
+            self._wake_waiters(r)
+
+    # --------------------------------------------------------- queries
+    def record(self, request_id: str) -> RequestRecord:
+        try:
+            return self.records[request_id]
+        except KeyError:
+            raise KeyError(f"unknown request id {request_id!r}") from None
+
+    async def result(self, request_id: str,
+                     timeout: Optional[float] = None) -> RequestRecord:
+        """Wait for a terminal state and return the record."""
+        rec = self.record(request_id)
+        await asyncio.wait_for(rec.done.wait(), timeout)
+        return rec
+
+    async def wait_events(self, request_id: str, cursor: int = 0,
+                          timeout: float = 1.0
+                          ) -> Tuple[List[dict], bool, int]:
+        """Long-poll progress: events past ``cursor`` (possibly empty on
+        timeout), whether the request is terminal, and the new cursor.
+        This is the transport-friendly streaming primitive — the HTTP
+        endpoint loops it and writes JSON lines."""
+        rec = self.record(request_id)
+        if cursor >= len(rec.events) and not rec.done.is_set():
+            waiter = self._loop.create_future()
+            rec._waiters.append(waiter)
+            try:
+                await asyncio.wait_for(waiter, timeout)
+            except asyncio.TimeoutError:
+                pass
+            finally:
+                if waiter in rec._waiters:
+                    rec._waiters.remove(waiter)
+        events = rec.events[cursor:]
+        return events, rec.done.is_set(), cursor + len(events)
+
+    async def cancel(self, request_id: str) -> bool:
+        """Cancel a *queued* request (still coalescing).  A running or
+        terminal request is not cancellable — dispatched work is shared
+        with the rest of its batch."""
+        rec = self.record(request_id)
+        if rec.status != "queued" or rec._open is None:
+            return False
+        lane = rec._lane
+        lane.planner.discard(rec._open, rec._token)
+        entry = lane.pending.get(id(rec._open))
+        if entry is not None:
+            _, recs, timer = entry
+            recs.remove(rec)
+            if not recs:
+                timer.cancel()
+                lane.pending.pop(id(rec._open), None)
+        rec._open = rec._lane = None
+        rec.status = "cancelled"
+        rec.finished_at = time.time()
+        rec.done.set()
+        self.metrics.incr("cancelled")
+        self.metrics.queue_delta(-1)
+        self._wake_waiters(rec)
+        return True
+
+    # ----------------------------------------------------------- drain
+    async def drain(self) -> dict:
+        """Graceful shutdown of traffic: stop admitting, reject every
+        still-queued request with the retriable status, and wait for
+        in-flight batches to finish.  Returns a summary dict."""
+        self._draining = True
+        rejected = 0
+        for lane in self._lanes.values():
+            for bucket, recs, timer in list(lane.pending.values()):
+                timer.cancel()
+                for rec in recs:
+                    lane.planner.discard(bucket, rec._token)
+                    rec._open = rec._lane = None
+                    rec.status = "rejected"
+                    rec.retriable = True
+                    rec.error = "service drained before dispatch"
+                    rec.finished_at = time.time()
+                    rec.done.set()
+                    self.metrics.incr("rejected")
+                    self.metrics.queue_delta(-1)
+                    self._wake_waiters(rec)
+                    rejected += 1
+            lane.pending.clear()
+        inflight = list(self._inflight.values())
+        if inflight:
+            await asyncio.gather(*inflight, return_exceptions=True)
+        return {"rejected_queued": rejected,
+                "finished_inflight": len(inflight)}
+
+    async def close(self) -> None:
+        """Drain, then tear down the worker executor."""
+        if not self._closed:
+            await self.drain()
+            self._closed = True
+            self._executor.shutdown(wait=True)

@@ -14,9 +14,10 @@ import pytest
 from hypothesis import given
 from hypothesis import strategies as st
 
-from repro.core.batching import (BatchAxes, bucket_key, instance_records,
-                                 pad_tree_records, plan_buckets,
-                                 stack_trees, static_signature)
+from repro.core.batching import (BatchAxes, OpenBucketPlanner, bucket_key,
+                                 instance_records, pad_tree_records,
+                                 plan_buckets, stack_trees,
+                                 static_signature)
 
 AX = BatchAxes(record_axes=(0, 0))
 
@@ -112,6 +113,97 @@ def test_pad_tree_records_contract():
         pad_tree_records(tree, 2)
     stacked = stack_trees([padded, padded])
     assert stacked["a"].shape == (2, 5, 2)
+
+
+def _inst(rec, S=16):
+    return (np.zeros((rec, S, S), np.float32),
+            np.zeros((rec, S, S), np.float32))
+
+
+def test_bucket_key_stable_under_member_permutation():
+    """The key pins *membership*, not arrival order: any permutation of
+    the (index, records) list hashes identically, and any change to the
+    membership, capacity or salt does not."""
+    members = [(0, 5), (1, 3), (2, 5), (3, 1)]
+    sig = static_signature(_inst(5), AX)
+    want = bucket_key("s", sig, 5, members)
+    for perm in ([members[i] for i in (2, 0, 3, 1)],
+                 list(reversed(members)),
+                 [members[i] for i in (1, 3, 0, 2)]):
+        assert bucket_key("s", sig, 5, perm) == want
+    assert bucket_key("s", sig, 5, members[:-1]) != want
+    assert bucket_key("s", sig, 6, members) != want
+    assert bucket_key("t", sig, 5, members) != want
+
+
+def test_waste_budget_exact_boundary():
+    """The admission rule is ``pad <= budget * cap * n`` — exactly at
+    the budget admits, one record over splits.  budget=0.1, cap 10:
+    records {10, 8} pad 2 == 0.1*10*2 -> one bucket; {10, 7} pad 3 ->
+    two."""
+    at = plan_buckets([_inst(10), _inst(8)], AX, waste_budget=0.1)
+    assert len(at) == 1 and at[0].capacity == 10
+    over = plan_buckets([_inst(10), _inst(7)], AX, waste_budget=0.1)
+    assert len(over) == 2
+    assert sorted(b.capacity for b in over) == [7, 10]
+
+
+# ---------------------------------------------------------------------
+# Incremental (open-bucket) planning — the serving scheduler's half
+# ---------------------------------------------------------------------
+
+def test_open_bucket_waste_boundary_matches_offline():
+    """Arrival-order admission enforces the identical boundary: small
+    then large grows the capacity and re-checks the rule."""
+    p = OpenBucketPlanner(AX, waste_budget=0.1)
+    b1 = p.offer("a", _inst(8))
+    assert p.offer("b", _inst(10)) is b1      # pad 2 == 0.1*10*2
+    assert b1.capacity == 10                  # grew to largest member
+    p2 = OpenBucketPlanner(AX, waste_budget=0.1)
+    b2 = p2.offer("a", _inst(7))
+    assert p2.offer("b", _inst(10)) is not b2  # pad 3 > 2: new bucket
+    assert len(p2.open_buckets) == 2
+
+
+def test_open_bucket_planner_keys_match_offline_planner():
+    """A closed open-bucket's key is the one ``plan_buckets`` emits for
+    the same membership — checkpoints written by a served batch resume
+    under the offline planner and vice versa."""
+    insts = [_inst(5), _inst(5), _inst(4)]
+    offline = plan_buckets(insts, AX, waste_budget=0.25, salt="s")
+    assert len(offline) == 1
+    p = OpenBucketPlanner(AX, waste_budget=0.25, salt="s")
+    buckets = {id(p.offer(i, inst)) for i, inst in enumerate(insts)}
+    assert len(buckets) == 1
+    closed = p.drain()
+    assert [b.key for b in closed] == [offline[0].key]
+    # ... and the key is arrival-order independent
+    p2 = OpenBucketPlanner(AX, waste_budget=0.25, salt="s")
+    for i in (2, 0, 1):
+        p2.offer(i, insts[i])
+    assert p2.drain()[0].key == offline[0].key
+
+
+def test_open_bucket_signature_grouping_and_max_members():
+    p = OpenBucketPlanner(AX, waste_budget=0.5, max_members=2)
+    b16 = p.offer(0, _inst(3, S=16))
+    assert p.offer(1, _inst(3, S=20)) is not b16   # shape never mixes
+    assert p.offer(2, _inst(3, S=16)) is b16
+    assert p.offer(3, _inst(3, S=16)) is not b16   # occupancy cap hit
+    assert len(p.open_buckets) == 3
+
+
+def test_open_bucket_discard_shrinks_capacity():
+    p = OpenBucketPlanner(AX, waste_budget=0.5)
+    b = p.offer(0, _inst(3))
+    p.offer(1, _inst(6))
+    assert b.capacity == 6
+    p.discard(b, 1)
+    assert b.capacity == 3                    # back to largest remaining
+    p.discard(b, 0)
+    assert len(p.open_buckets) == 0           # emptied bucket closes
+    with pytest.raises(ValueError, match="waste_budget"):
+        OpenBucketPlanner(AX, waste_budget=1.0)
 
 
 # ---------------------------------------------------------------------

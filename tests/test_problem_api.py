@@ -424,3 +424,71 @@ def test_custom_problem_through_solve():
     assert sol.log.converged_at is not None
     np.testing.assert_allclose(sol.x, np.ones(3), rtol=1e-2)
     assert sol.costs == sol.log.costs
+
+
+# ----------------------------------------------- percentiles / progress
+
+def test_percentiles_helper():
+    from repro.core.driver import RunLog, percentiles
+    assert percentiles([]) == {}
+    vals = list(range(1, 101))                      # 1..100
+    p = percentiles(vals, qs=(50, 90, 99))
+    assert set(p) == {"p50", "p90", "p99"}
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p50"] <= p["p90"] <= p["p99"]
+    # non-integer quantiles keep their float label
+    assert set(percentiles(vals, qs=(99.9,))) == {"p99.9"}
+    log = RunLog(times=[0.1, 0.2, 0.3, 0.4])
+    assert log.percentiles() == percentiles(log.times)
+    assert RunLog().percentiles() == {}
+
+
+def test_solution_percentiles_surface(psf_data):
+    cfg = SolverConfig(mode="sparse", max_iter=6, tol=0.0, n_scales=2)
+    sol = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg, chunk=3)
+    p = sol.percentiles()
+    assert set(p) == {"p50", "p90", "p99"}
+    assert p == sol.log.percentiles()
+    assert all(v >= 0 for v in p.values())
+    assert sol.percentiles(qs=(50,)) == {
+        "p50": pytest.approx(float(np.percentile(sol.log.times, 50)))}
+
+
+def test_progress_fn_chunk_events(psf_data):
+    """progress_fn fires once per chunk-boundary sync with the running
+    iteration count and the newest objective; the per-step path fires
+    per iteration; iters_run lands on the log for both."""
+    cfg = SolverConfig(mode="sparse", max_iter=7, tol=0.0, n_scales=2)
+    events = []
+    sol = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                chunk=3, cost_every=1, progress_fn=events.append)
+    assert [e["done"] for e in events] == [3, 6, 7]   # tail chunk of 1
+    assert [e["iters"] for e in events] == [3, 3, 1]
+    assert all(e["kind"] == "chunk" for e in events)
+    assert events[-1]["cost"] == pytest.approx(sol.log.costs[-1])
+    assert all(e["dt_s"] > 0 for e in events)
+    assert sol.log.iters_run == 7
+
+    per_step = []
+    sol1 = solve("deconvolve", psf_data.Y, psf_data.psfs, cfg=cfg,
+                 chunk=1, progress_fn=per_step.append)
+    assert [e["done"] for e in per_step] == list(range(1, 8))
+    assert sol1.log.iters_run == 7
+
+
+def test_progress_fn_batched_per_instance(psf_data):
+    """solve_many relays per-instance progress keyed by original index,
+    skipping padding rows."""
+    from repro.core.problem import solve_many
+    cfg = SolverConfig(mode="sparse", max_iter=6, tol=0.0, n_scales=2)
+    d2 = psf_op.simulate(3, jax.random.PRNGKey(7))
+    seen = {}
+    sols = solve_many(
+        "deconvolve", [(psf_data.Y, psf_data.psfs), (d2.Y, d2.psfs)],
+        cfg=cfg, chunk=3,
+        progress_fn=lambda e: [seen.setdefault(j, []).append(st)
+                               for j, st in e["instances"].items()])
+    assert sorted(seen) == [0, 1]
+    for j, sol in enumerate(sols):
+        assert seen[j][-1]["iters_run"] == sol.log.iters_run == 6
+        assert seen[j][-1]["cost"] == pytest.approx(sol.log.costs[-1])
