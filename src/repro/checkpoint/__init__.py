@@ -5,3 +5,4 @@ from repro.checkpoint.checkpointer import (Checkpointer,  # noqa
                                            latest_step, latest_valid_step,
                                            restore, save,
                                            validate_checkpoint)
+from repro.checkpoint.wal import WriteAheadLog  # noqa

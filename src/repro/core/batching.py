@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -218,7 +218,7 @@ class OpenBucket:
     """
 
     __slots__ = ("signature", "capacity", "members", "waste_budget",
-                 "max_members")
+                 "max_members", "deadlines")
 
     def __init__(self, signature: Tuple, waste_budget: float,
                  max_members: Optional[int] = None):
@@ -227,6 +227,10 @@ class OpenBucket:
         self.members: List[Tuple[Any, int]] = []   # (token, records)
         self.waste_budget = float(waste_budget)
         self.max_members = max_members
+        # token -> absolute deadline (per-request deadline_s, §21): the
+        # scheduler arms its coalescing timer against the earliest one
+        # so a tight-deadline member never waits out the whole window
+        self.deadlines: Dict[Any, float] = {}
 
     def try_admit(self, token, records: int) -> bool:
         """Admit ``token`` if the post-admission padding fraction stays
@@ -248,10 +252,17 @@ class OpenBucket:
         for j, (t, _) in enumerate(self.members):
             if t == token:
                 del self.members[j]
+                self.deadlines.pop(token, None)
                 self.capacity = max((n for _, n in self.members),
                                     default=0)
                 return True
         return False
+
+    @property
+    def earliest_deadline(self) -> Optional[float]:
+        """The soonest member deadline, or ``None`` when no member has
+        one — the bound a deadline-aware scheduler dispatches by."""
+        return min(self.deadlines.values()) if self.deadlines else None
 
     def __len__(self) -> int:
         return len(self.members)
@@ -286,19 +297,25 @@ class OpenBucketPlanner:
         self.max_members = max_members
         self._open: List[OpenBucket] = []
 
-    def offer(self, token, instance: Sequence) -> OpenBucket:
+    def offer(self, token, instance: Sequence, *,
+              deadline: Optional[float] = None) -> OpenBucket:
         """Place one instance: first open bucket of matching signature
         with budget headroom, else a fresh bucket.  Returns the (still
-        open) bucket the instance joined."""
+        open) bucket the instance joined.  ``deadline`` (absolute time)
+        is recorded on the bucket for deadline-aware dispatch."""
         n = instance_records(instance, self.axes)
         sig = static_signature(instance, self.axes)
         if not self.axes.pad_records:
             sig = sig + (("records", n),)
         for b in self._open:
             if b.signature == sig and b.try_admit(token, n):
+                if deadline is not None:
+                    b.deadlines[token] = float(deadline)
                 return b
         b = OpenBucket(sig, self.waste_budget, self.max_members)
         b.try_admit(token, n)       # sole member: pad 0, always admits
+        if deadline is not None:
+            b.deadlines[token] = float(deadline)
         self._open.append(b)
         return b
 

@@ -89,6 +89,13 @@ class RunOptions:
     # the driver's thread at an already-paid sync point, so a cheap
     # callback adds no dispatches; exceptions propagate and abort the
     # run (relays must do their own shielding).
+    #
+    # Control return (§21): the callback may return a dict to steer the
+    # run — {"stop": True} halts at this chunk boundary (RunLog records
+    # cancelled_at), and for batched drivers {"cancel_instances": [j..]}
+    # freezes the named original-index lanes exactly like converged
+    # ones (re-compacted on the next pass, siblings unperturbed).  A
+    # None/falsy return (the common case) changes nothing.
     progress_fn: Optional[Callable] = None
     # step wiring
     step_fn_light: Optional[Callable] = None
@@ -148,6 +155,10 @@ class RunLog:
     # that equals len(costs); for solve_many lanes frozen by the active
     # mask it stops growing at convergence while the bucket runs on
     iters_run: Optional[int] = None
+    # set when the run was halted by a progress_fn control return
+    # (serve-layer cancel / deadline expiry, §21) rather than by
+    # convergence — the last iteration the instance advanced through
+    cancelled_at: Optional[int] = None
 
     @property
     def total_seconds(self) -> float:
@@ -458,7 +469,13 @@ class IterativeDriver:
             if conv:
                 self.log.converged_at = i - 1
             if self.progress_fn is not None:
-                self.progress_fn(self._progress_event(i - k, k, dt))
+                ctl = self.progress_fn(self._progress_event(i - k, k, dt))
+                # only a dict return is a control signal — callbacks
+                # that happen to return something else (a logging
+                # listcomp, an appended list) must stay inert
+                if isinstance(ctl, dict) and ctl.get("stop"):
+                    self.log.cancelled_at = i - 1
+                    break
             if conv:
                 break
         # accumulate across reruns of a warmed driver, mirroring the
@@ -522,7 +539,10 @@ class IterativeDriver:
             if conv:
                 self.log.converged_at = i
             if self.progress_fn is not None:
-                self.progress_fn(self._progress_event(i, 1, dt))
+                ctl = self.progress_fn(self._progress_event(i, 1, dt))
+                if isinstance(ctl, dict) and ctl.get("stop"):
+                    self.log.cancelled_at = i
+                    break
             if conv:
                 break
         self.log.iters_run = (self.log.iters_run or 0) + n_done
@@ -724,6 +744,28 @@ class BatchedDriver:
                 "done": int(start + k), "dt_s": float(dt),
                 "instances": inst}
 
+    def _apply_control(self, ctl: dict, it: int) -> None:
+        """Apply a ``progress_fn`` control return (§21): freeze the
+        named original-index instances' lanes at this chunk boundary
+        exactly like converged ones — deactivated here, retired by the
+        ``_maybe_recompact`` pass that follows the progress callback —
+        so sibling lanes' trajectories are unperturbed.  ``stop`` ends
+        the whole bucket (every still-active lane is cancelled)."""
+        if ctl.get("stop"):
+            targets = [int(j) for j in self.orig if j >= 0]
+        else:
+            targets = [int(j) for j in (ctl.get("cancel_instances")
+                                        or ())]
+        for j in targets:
+            rows = np.flatnonzero(self.orig == j)
+            if rows.size == 0:
+                continue
+            row = int(rows[0])
+            if not self.active[row]:
+                continue
+            self.active[row] = False
+            self.logs[row].cancelled_at = it
+
     # ---------------------------------------------------- re-compaction
     def _maybe_recompact(self) -> None:
         cur = self.active[self.slots]
@@ -870,7 +912,9 @@ class BatchedDriver:
                 self.checkpoint_fn(self.snapshot_payload(), i + k - 1)
             i += k
             if self.progress_fn is not None:
-                self.progress_fn(self._progress_event(i - k, k, dt))
+                ctl = self.progress_fn(self._progress_event(i - k, k, dt))
+                if isinstance(ctl, dict):
+                    self._apply_control(ctl, i - 1)
             self._maybe_recompact()
         if sup is not None:
             self.recovery = sup.finalize()
@@ -896,7 +940,11 @@ class _BatchSupervisor:
         self.driver = driver
         self.report = RecoveryReport()
         self.ring: deque = deque(maxlen=cfg.ring)
-        self.rng = np.random.default_rng(cfg.seed)
+        # mirror Supervisor: the chaos seed wins during a drill so
+        # recovery reports replay deterministically
+        _seed = _chaos.active_seed()
+        self.rng = np.random.default_rng(cfg.seed if _seed is None
+                                         else _seed)
         self._rollbacks_done = 0
         self._last_restored_it: Optional[int] = None
         self._kernel_baseline = len(_kcommon.kernel_fallbacks())
@@ -931,9 +979,17 @@ class _BatchSupervisor:
         d.bundle = d.bundle.with_data(d.state)
         return snap["it"]
 
+    def _exhausted(self, msg: str):
+        """Budget-exhaustion error carrying the recovery ledger, so the
+        serving quarantine path (§21) can attach it per request."""
+        from repro.resilience.errors import ResilienceExhausted
+        err = ResilienceExhausted(msg)
+        err.report = self.finalize()
+        return err
+
     # --------------------------------------------------------- dispatch
     def dispatch(self, fn: Callable, state, mask, i: int, k: int):
-        from repro.resilience.errors import ResilienceExhausted, classify
+        from repro.resilience.errors import classify
         attempt = 0
         while True:
             t0 = time.perf_counter()
@@ -946,7 +1002,7 @@ class _BatchSupervisor:
                 if kind != "transient":
                     raise
                 if attempt >= self.cfg.max_retries:
-                    raise ResilienceExhausted(
+                    raise self._exhausted(
                         f"bucket chunk dispatch at iteration {i} still "
                         f"failing after {attempt} retries: {e}") from e
                 t1 = time.perf_counter()
@@ -976,10 +1032,9 @@ class _BatchSupervisor:
             raise DivergenceError(str(e), step=it) from e
 
     def rollback(self, err: DivergenceError) -> int:
-        from repro.resilience.errors import ResilienceExhausted
         self.report.record_fault("divergence", err.step, err)
         if self._rollbacks_done >= self.cfg.max_rollbacks:
-            raise ResilienceExhausted(
+            raise self._exhausted(
                 f"rollback budget ({self.cfg.max_rollbacks}) exhausted; "
                 f"latest divergence: {err}") from err
         self._rollbacks_done += 1
@@ -1005,15 +1060,14 @@ class _BatchSupervisor:
         return it
 
     def _restore_from_disk(self, err: DivergenceError) -> int:
-        from repro.resilience.errors import ResilienceExhausted
         if self.cfg.checkpoint_dir is None:
-            raise ResilienceExhausted(
+            raise self._exhausted(
                 "snapshot ring exhausted and no checkpoint_dir to fall "
                 "back to; latest divergence: " + str(err)) from err
         from repro.checkpoint import checkpointer as ckpt
         step, _skipped = ckpt.latest_valid_step(self.cfg.checkpoint_dir)
         if step is None:
-            raise ResilienceExhausted(
+            raise self._exhausted(
                 f"snapshot ring exhausted and no valid checkpoint under "
                 f"{self.cfg.checkpoint_dir!r}; latest divergence: {err}"
             ) from err

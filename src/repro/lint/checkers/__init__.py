@@ -2,7 +2,8 @@
 (each module calls :func:`repro.lint.core.register_checker` at import
 time); ``repro.lint.core`` imports it lazily before every run."""
 from repro.lint.checkers import (batching, donation, dtypes, imports,
-                                 pallas, protocol, resilience, tracer)
+                                 pallas, protocol, resilience, serve,
+                                 tracer)
 
 __all__ = ["batching", "donation", "dtypes", "imports", "pallas",
-           "protocol", "resilience", "tracer"]
+           "protocol", "resilience", "serve", "tracer"]

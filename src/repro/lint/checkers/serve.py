@@ -1,0 +1,83 @@
+"""RPL901 untracked-task: serving-layer asyncio tasks must not drop
+their exceptions.
+
+In ``repro/serve/`` a task spawned with ``asyncio.create_task`` /
+``asyncio.ensure_future`` (or ``loop.create_task``) whose handle is
+discarded — a bare expression statement, or assigned to a name that is
+never used again — loses its exception: asyncio only surfaces it as a
+"Task exception was never retrieved" log line at garbage-collection
+time, long after the serving loop silently stopped doing whatever the
+task was for (the §21 watchdog dying this way would disable
+hung-dispatch reaping with no visible failure).  A spawned task must be
+awaited, gathered, stored on an object, returned, or given an
+``add_done_callback`` that retrieves the exception.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.lint.core import Finding, ModuleSource, Rule, register_checker
+
+RPL901 = Rule("RPL901", "untracked-task",
+              "asyncio task spawned in repro/serve/ whose handle (and "
+              "exception) is dropped")
+
+#: path fragment that puts a module in scope (posix-normalised)
+_SCOPED = "repro/serve/"
+
+#: call attrs/names that spawn a task owning future exceptions
+_SPAWNERS = frozenset({"create_task", "ensure_future"})
+
+
+def _spawns_task(call: ast.Call) -> str:
+    fn = call.func
+    name = (fn.id if isinstance(fn, ast.Name)
+            else fn.attr if isinstance(fn, ast.Attribute) else None)
+    return name if name in _SPAWNERS else ""
+
+
+def _flag(mod: ModuleSource, node, spawn: str, how: str) -> Finding:
+    return mod.finding(
+        RPL901, node,
+        f"{spawn}(...) {how} — its exception is never retrieved and "
+        f"the task dies silently; await/gather it, store the handle, "
+        f"or attach an add_done_callback that calls .exception()")
+
+
+@register_checker("serve", [RPL901])
+def check(mod: ModuleSource):
+    findings: List[Finding] = []
+    if _SCOPED not in mod.path.as_posix():
+        return findings
+    # 1. bare-statement spawns anywhere in the module
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Expr) and \
+                isinstance(node.value, ast.Call):
+            spawn = _spawns_task(node.value)
+            if spawn:
+                findings.append(_flag(mod, node, spawn,
+                                      "discards the task handle"))
+    # 2. handle assigned to a local name that is never used again
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        assigns = []                     # (node, name, spawner)
+        loads: dict = {}                 # name -> load count
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                spawn = _spawns_task(node.value)
+                if spawn:
+                    assigns.append((node, node.targets[0].id, spawn))
+            if isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load):
+                loads[node.id] = loads.get(node.id, 0) + 1
+        for node, name, spawn in assigns:
+            if loads.get(name, 0) == 0:
+                findings.append(_flag(
+                    mod, node, spawn,
+                    f"handle {name!r} is assigned but never used"))
+    return findings

@@ -54,9 +54,18 @@ from repro.resilience.errors import InjectedFault
 
 ENV_VAR = "REPRO_CHAOS"
 
-#: the canonical fault-point names (``kernel:<family>`` also accepted)
+#: the canonical fault-point names (``kernel:<family>`` also accepted).
+#: The ``serve_*`` points are serving-layer faults consumed by
+#: ``repro.serve`` (DESIGN.md §21) rather than the solve loop:
+#: ``serve_admit_drop`` loses an admitted request after it was
+#: journaled (a crash between journal append and scheduling),
+#: ``serve_bucket_poison`` NaN-poisons one lane of a coalesced bucket
+#: (addressable per lane as ``serve_bucket_poison@<lane>``), and
+#: ``serve_crash`` hard-stops the service at the k-th progress event —
+#: the restart-and-replay drill.
 FAULT_POINTS = ("dispatch", "carry_nan", "ckpt_write", "ckpt_corrupt",
-                "kernel")
+                "kernel", "serve_admit_drop", "serve_bucket_poison",
+                "serve_crash")
 
 
 @dataclass(frozen=True)
@@ -129,6 +138,13 @@ _STATE: Optional[_ChaosState] = None
 
 def is_active() -> bool:
     return _STATE is not None
+
+
+def active_seed() -> Optional[int]:
+    """The seed of the active chaos plan, or ``None`` when chaos is
+    inactive.  Recovery-path consumers (supervisor backoff jitter) reuse
+    it so a chaos drill's recovery report replays bit-for-bit."""
+    return _STATE.cfg.seed if _STATE is not None else None
 
 
 @contextlib.contextmanager

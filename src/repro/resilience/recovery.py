@@ -20,12 +20,21 @@ class ResilienceConfig:
       each after restoring the chunk-start snapshot (donated buffers
       do not survive a failed dispatch) and an exponential backoff of
       ``backoff_s * backoff_factor**attempt``, jittered by ``jitter``
-      (seeded — chaos replays are deterministic).
+      (seeded from ``seed``, or from the active chaos seed during a
+      drill — chaos replays are deterministic run-to-run).
     - ``ring`` — chunk-boundary snapshots kept in host memory (the
       in-memory rollback source).  Divergence rollback consumes ring
       entries newest-first; when the ring runs dry it falls back to
       the newest *valid* on-disk checkpoint under ``checkpoint_dir``
       (``solve()`` fills this in from its own ``checkpoint_dir=``).
+      Memory bound: each entry is one full host copy of the carried
+      state — the data bundle plus replicated leaves (and the carried
+      output slot when ``cost_every != 1``) — so resident overhead is
+      ``ring × sizeof(carry)`` bytes; for a batched ``solve_many``
+      bucket the carry is the *whole padded bucket*, so deep rings on
+      large buckets are the first thing to trim under host-memory
+      pressure (``ring=1`` still supports dispatch retry; rollback
+      then leans on the on-disk checkpoint fallback).
     - ``max_rollbacks`` — total divergence rollbacks before giving up
       (:class:`~repro.resilience.errors.ResilienceExhausted`): a
       deterministically diverging iterate must not loop forever.
@@ -80,6 +89,35 @@ class RecoveryReport:
         out = asdict(self)
         out["wall_time_lost_s"] = round(out["wall_time_lost_s"], 6)
         return out
+
+    def for_range(self, last_step: Optional[int]) -> "RecoveryReport":
+        """Slice this (bucket-level) ledger to the faults a single lane
+        could have witnessed: those at ``step <= last_step`` (plus
+        step-less ones).  Retry/rollback counts are recomputed from the
+        sliced faults; kernel fallbacks and wall time lost are
+        process-/bucket-level and carried over whole.  Used by the
+        serving layer (§21) to attribute one shared per-bucket report
+        per originating request; ``last_step=None`` means the lane ran
+        to the end and sees everything."""
+        if last_step is None:
+            faults = list(self.faults)
+        else:
+            faults = [f for f in self.faults
+                      if f.get("step") is None
+                      or f["step"] <= int(last_step)]
+        sliced = RecoveryReport(
+            retries=sum(1 for f in faults if f["point"] == "dispatch"),
+            rollbacks=sum(1 for f in faults
+                          if f["point"] == "divergence"),
+            checkpoint_restores=self.checkpoint_restores,
+            faults=[dict(f) for f in faults],
+            kernel_fallbacks=[dict(e) for e in self.kernel_fallbacks],
+            wall_time_lost_s=self.wall_time_lost_s)
+        # dispatch faults include the final (non-retried) raise; clamp
+        # to the counters the supervisor actually banked
+        sliced.retries = min(sliced.retries, self.retries)
+        sliced.rollbacks = min(sliced.rollbacks, self.rollbacks)
+        return sliced
 
     def __str__(self) -> str:
         return (f"RecoveryReport(retries={self.retries}, "

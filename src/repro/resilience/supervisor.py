@@ -62,7 +62,12 @@ class Supervisor:
         self.last_init = last_init
         self.report = RecoveryReport()
         self.ring: deque = deque(maxlen=cfg.ring)
-        self.rng = np.random.default_rng(cfg.seed)
+        # backoff jitter reuses the chaos seed when a drill is active so
+        # recovery reports replay bit-for-bit run-to-run (§18 satellite)
+        from repro.resilience import chaos as _chaos
+        seed = _chaos.active_seed()
+        self.rng = np.random.default_rng(cfg.seed if seed is None
+                                         else seed)
         self._rollbacks_done = 0
         self._last_restored_it: Optional[int] = None
         from repro.kernels import common as _kcommon
@@ -102,7 +107,7 @@ class Supervisor:
                 if kind != "transient":
                     raise
                 if attempt >= self.cfg.max_retries:
-                    raise ResilienceExhausted(
+                    raise self._exhausted(
                         f"chunk dispatch at iteration {i} still failing "
                         f"after {attempt} retries: {e}") from e
                 t1 = time.perf_counter()
@@ -138,7 +143,7 @@ class Supervisor:
         ``(data, replicated, last, iteration)``."""
         self.report.record_fault("divergence", err.step, err)
         if self._rollbacks_done >= self.cfg.max_rollbacks:
-            raise ResilienceExhausted(
+            raise self._exhausted(
                 f"rollback budget ({self.cfg.max_rollbacks}) exhausted; "
                 f"latest divergence: {err}") from err
         self._rollbacks_done += 1
@@ -169,13 +174,13 @@ class Supervisor:
         """Ring exhausted: restore the newest checkpoint that passes
         integrity validation (``checkpoint.checkpointer``)."""
         if self.cfg.checkpoint_dir is None:
-            raise ResilienceExhausted(
+            raise self._exhausted(
                 "snapshot ring exhausted and no checkpoint_dir to fall "
                 "back to; latest divergence: " + str(err)) from err
         from repro.checkpoint import checkpointer as ckpt
         step, _skipped = ckpt.latest_valid_step(self.cfg.checkpoint_dir)
         if step is None:
-            raise ResilienceExhausted(
+            raise self._exhausted(
                 f"snapshot ring exhausted and no valid checkpoint under "
                 f"{self.cfg.checkpoint_dir!r}; latest divergence: {err}"
             ) from err
@@ -188,6 +193,14 @@ class Supervisor:
         last = self.last_init() if self.last_init is not None else None
         n_logged = max(step - self.start_iter, 0)
         return state["data"], state["replicated"], last, step, n_logged
+
+    def _exhausted(self, msg: str) -> ResilienceExhausted:
+        """Build a budget-exhaustion error carrying the (finalized)
+        recovery ledger so upstream layers — notably the serving
+        quarantine path (§21) — can attribute the failure per request."""
+        err = ResilienceExhausted(msg)
+        err.report = self.finalize()
+        return err
 
     # --------------------------------------------------------- wrap-up
     def finalize(self) -> RecoveryReport:

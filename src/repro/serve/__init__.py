@@ -1,20 +1,27 @@
-"""repro.serve — async batched solve-as-a-service frontend (DESIGN.md §20).
+"""repro.serve — async batched solve-as-a-service frontend (DESIGN.md
+§20, resilience §21).
 
 The serving layer the paper's architecture implies: an asyncio core
 (:class:`AsyncSolveService`) that admits, coalesces and batches solve
-requests onto :func:`repro.core.problem.solve_many`, plus a stdlib-only
-JSON-over-HTTP transport (``serve.server``) and client (``serve.client``).
+requests onto :func:`repro.core.problem.solve_many` — with poison-bucket
+quarantine, per-request deadlines, breaker-based load shedding and a
+crash-safe request journal — plus a stdlib-only JSON-over-HTTP
+transport (``serve.server``) and client (``serve.client``).
 
     from repro.serve import AsyncSolveService, ServeConfig, SolveRequest
     from repro.serve.server import serve_http, ServiceRunner
     from repro.serve.client import ServeClient
 """
+from repro.serve.breaker import CircuitBreaker
+from repro.serve.journal import RequestJournal, ReplayPlan, \
+    journal_pending
 from repro.serve.metrics import Metrics
 from repro.serve.service import (AsyncSolveService, RequestRecord,
                                  RequestRejected, ServeConfig,
                                  SolveRequest)
 
 __all__ = [
-    "AsyncSolveService", "Metrics", "RequestRecord", "RequestRejected",
-    "ServeConfig", "SolveRequest",
+    "AsyncSolveService", "CircuitBreaker", "Metrics", "ReplayPlan",
+    "RequestJournal", "RequestRecord", "RequestRejected", "ServeConfig",
+    "SolveRequest", "journal_pending",
 ]

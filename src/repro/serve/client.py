@@ -59,11 +59,14 @@ class ServeClient:
     def submit(self, problem: str, inputs: Sequence[Any], *,
                cfg: Optional[dict] = None,
                options: Optional[dict] = None,
-               chaos: Optional[str] = None) -> str:
+               chaos: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> str:
         """Submit one request; returns its id.  ``cfg``/``options`` are
-        plain dicts (see ``serve.server`` codecs); raises
-        :class:`ServeError` with ``retriable=True`` on admission
-        refusal."""
+        plain dicts (see ``serve.codec``); ``deadline_s`` is a
+        wall-clock budget from admission — past it, a running request
+        is frozen at the next chunk boundary and fails with a deadline
+        error.  Raises :class:`ServeError` with ``retriable=True`` on
+        admission refusal (queue full, drain, or open breaker)."""
         body = {"problem": problem,
                 "inputs": [np.asarray(x).tolist() for x in inputs]}
         if cfg is not None:
@@ -72,6 +75,8 @@ class ServeClient:
             body["options"] = options
         if chaos is not None:
             body["chaos"] = chaos
+        if deadline_s is not None:
+            body["deadline_s"] = float(deadline_s)
         return self._call("POST", "/v1/requests", body)["id"]
 
     def status(self, request_id: str) -> dict:
@@ -121,6 +126,16 @@ class ServeClient:
 
     def health(self) -> dict:
         return self._call("GET", "/v1/healthz")
+
+    def ready(self) -> dict:
+        """Readiness probe; the 503-while-not-ready response body is
+        returned (not raised) so callers can inspect the detail."""
+        try:
+            return self._call("GET", "/v1/readyz")
+        except ServeError as e:
+            if e.status == 503:
+                return e.payload
+            raise
 
     def drain(self) -> dict:
         return self._call("POST", "/v1/admin/drain")

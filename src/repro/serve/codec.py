@@ -1,0 +1,115 @@
+"""Wire/journal codecs for serve requests (DESIGN.md §20/§21).
+
+Factored out of ``serve.server`` so the request journal can round-trip
+requests without importing the HTTP transport (which imports the
+service, which owns the journal — a cycle otherwise).  Two families:
+
+- the HTTP wire format: configs as plain dicts decoded through the
+  per-workload config dataclass, inputs as nested JSON lists;
+- the journal format: lossless base64 array records
+  (:func:`encode_array`/:func:`decode_array`) plus JSON-safe
+  config/option encodings (:func:`encode_config`/:func:`encode_options`)
+  that survive a crash-restart round trip bit-for-bit.
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+#: problem key -> (module, config dataclass) for decoding ``cfg`` dicts;
+#: in-process callers pass config objects directly instead
+_CONFIG_TYPES: Dict[str, Tuple[str, str]] = {
+    "deconvolve": ("repro.imaging.condat", "SolverConfig"),
+    "scdl": ("repro.imaging.scdl", "SCDLConfig"),
+    "lowrank": ("repro.imaging.lowrank", "CompletionConfig"),
+}
+
+
+def decode_config(problem: str, cfg: Optional[dict]):
+    if cfg is None:
+        return None
+    if not isinstance(cfg, dict):
+        raise ValueError(f"cfg must be a JSON object, got "
+                         f"{type(cfg).__name__}")
+    if problem not in _CONFIG_TYPES:
+        raise ValueError(
+            f"no config codec for workload {problem!r}; known: "
+            f"{sorted(_CONFIG_TYPES)}")
+    mod, name = _CONFIG_TYPES[problem]
+    cls = getattr(importlib.import_module(mod), name)
+    return cls(**cfg)
+
+
+def encode_config(cfg) -> Optional[dict]:
+    """A workload config dataclass as a JSON-safe dict (inverse of
+    :func:`decode_config` for the journal)."""
+    if cfg is None:
+        return None
+    if isinstance(cfg, dict):
+        return dict(cfg)
+    return dataclasses.asdict(cfg)
+
+
+def decode_options(options: Optional[dict]) -> Dict[str, Any]:
+    """Run-control dict off the wire; the one structured field is
+    ``resilience`` (a dict of ResilienceConfig overrides)."""
+    opts = dict(options or {})
+    res = opts.get("resilience")
+    if isinstance(res, dict):
+        from repro.resilience.recovery import ResilienceConfig
+        opts["resilience"] = ResilienceConfig(**res)
+    return opts
+
+
+def encode_options(options: Optional[dict]) -> Dict[str, Any]:
+    """Run-control dict as JSON (inverse of :func:`decode_options`).
+    A ``ResilienceConfig`` is flattened to its JSON-safe fields —
+    callable hooks (``rollback_rescale``) and extra exception types
+    (``transient_types``) cannot be journaled and are dropped with the
+    documented caveat that a replayed request falls back to the
+    defaults for those two fields."""
+    opts = dict(options or {})
+    res = opts.get("resilience")
+    if res is not None and not isinstance(res, dict):
+        d = dataclasses.asdict(res)
+        d.pop("rollback_rescale", None)
+        d.pop("transient_types", None)
+        opts["resilience"] = d
+    return opts
+
+
+def decode_inputs(inputs) -> Tuple[np.ndarray, ...]:
+    """Wire inputs: nested JSON lists (decoded float32 unless a
+    ``{"data", "dtype"}`` record overrides) or journal array records
+    (``{"b64", "dtype", "shape"}``)."""
+    if not isinstance(inputs, (list, tuple)):
+        raise ValueError("inputs must be a JSON array of arrays")
+    out = []
+    for x in inputs:
+        if isinstance(x, dict) and "b64" in x:
+            out.append(decode_array(x))
+        elif isinstance(x, dict):
+            out.append(np.asarray(x["data"],
+                                  dtype=np.dtype(x.get("dtype",
+                                                       "float32"))))
+        else:
+            out.append(np.asarray(x, dtype=np.float32))
+    return tuple(out)
+
+
+def encode_array(a) -> dict:
+    """Lossless journal record of one array: raw bytes base64'd with
+    dtype/shape — exact replay beats human-readable here."""
+    a = np.ascontiguousarray(np.asarray(a))
+    return {"dtype": a.dtype.str, "shape": list(a.shape),
+            "b64": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def decode_array(d: dict) -> np.ndarray:
+    return np.frombuffer(
+        base64.b64decode(d["b64"]), dtype=np.dtype(d["dtype"])
+    ).reshape(d["shape"]).copy()

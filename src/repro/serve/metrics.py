@@ -22,9 +22,15 @@ from typing import Dict, Optional
 from repro.core.driver import percentiles
 
 #: counters every service exposes; ``rejected`` counts admission-control
-#: refusals (queue full / draining) — those are retriable by contract
+#: refusals (queue full / draining) — those are retriable by contract.
+#: §21 resilience counters: ``shed`` (circuit-breaker refusals, a
+#: subset of ``rejected``), ``expired`` (deadline exceeded in flight),
+#: ``quarantined`` (poison buckets re-dispatched solo), ``replayed``
+#: (requests re-admitted from the journal on restart), and ``hung``
+#: (dispatches reaped by the watchdog timeout)
 COUNTERS = ("submitted", "accepted", "rejected", "cancelled",
-            "dispatched", "completed", "failed")
+            "dispatched", "completed", "failed",
+            "shed", "expired", "quarantined", "replayed", "hung")
 
 
 class Metrics:

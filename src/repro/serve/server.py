@@ -21,90 +21,50 @@ Endpoints (all JSON):
 - ``GET  /v1/requests/<id>/events``      — progress stream: newline-
   delimited JSON chunk events relayed live from the driver's
   ``progress_fn``, terminated by a ``{"kind": "end", ...}`` line.
-- ``GET  /v1/metrics`` / ``GET /v1/healthz`` — metrics snapshot /
-  liveness (+ drain state).
+- ``GET  /v1/metrics`` / ``GET /v1/healthz`` — metrics snapshot (incl.
+  per-workload breaker states) / liveness (+ drain/crash state).
+- ``GET  /v1/readyz``                    — readiness: 200 when the
+  service can usefully take traffic, 503 (with detail) while draining,
+  crashed, queue-full, or a workload breaker is open (§21).
 - ``POST /v1/admin/drain``               — graceful drain (in-flight
   finishes, queued rejected retriable).
 
 Input arrays arrive as nested JSON lists and are decoded as float32
 (override per input with ``{"data": ..., "dtype": "..."}``); workload
 configs arrive as plain dicts and are decoded through the per-workload
-config dataclass (`_CONFIG_TYPES`).
+config dataclass.  The codecs live in ``serve.codec`` (shared with the
+request journal) and are re-exported here for compatibility.
 """
 from __future__ import annotations
 
 import asyncio
-import importlib
 import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
+# re-exported: the journal shares these codecs (see serve.codec)
+from repro.serve.codec import (decode_config, decode_inputs,  # noqa: F401
+                               decode_options)
 from repro.serve.service import (AsyncSolveService, RequestRejected,
                                  RequestRecord, ServeConfig,
                                  SolveRequest)
-
-#: problem key -> (module, config dataclass) for decoding HTTP ``cfg``
-#: dicts; in-process callers pass config objects directly instead
-_CONFIG_TYPES: Dict[str, Tuple[str, str]] = {
-    "deconvolve": ("repro.imaging.condat", "SolverConfig"),
-    "scdl": ("repro.imaging.scdl", "SCDLConfig"),
-    "lowrank": ("repro.imaging.lowrank", "CompletionConfig"),
-}
-
-
-def decode_config(problem: str, cfg: Optional[dict]):
-    if cfg is None:
-        return None
-    if not isinstance(cfg, dict):
-        raise ValueError(f"cfg must be a JSON object, got "
-                         f"{type(cfg).__name__}")
-    if problem not in _CONFIG_TYPES:
-        raise ValueError(
-            f"no config codec for workload {problem!r}; known: "
-            f"{sorted(_CONFIG_TYPES)}")
-    mod, name = _CONFIG_TYPES[problem]
-    cls = getattr(importlib.import_module(mod), name)
-    return cls(**cfg)
-
-
-def decode_options(options: Optional[dict]) -> Dict[str, Any]:
-    """Run-control dict off the wire; the one structured field is
-    ``resilience`` (a dict of ResilienceConfig overrides)."""
-    opts = dict(options or {})
-    res = opts.get("resilience")
-    if isinstance(res, dict):
-        from repro.resilience.recovery import ResilienceConfig
-        opts["resilience"] = ResilienceConfig(**res)
-    return opts
-
-
-def decode_inputs(inputs) -> Tuple[np.ndarray, ...]:
-    if not isinstance(inputs, (list, tuple)):
-        raise ValueError("inputs must be a JSON array of arrays")
-    out = []
-    for x in inputs:
-        if isinstance(x, dict):
-            out.append(np.asarray(x["data"],
-                                  dtype=np.dtype(x.get("dtype",
-                                                       "float32"))))
-        else:
-            out.append(np.asarray(x, dtype=np.float32))
-    return tuple(out)
 
 
 def decode_request(payload: dict) -> SolveRequest:
     if "problem" not in payload or "inputs" not in payload:
         raise ValueError('request body needs "problem" and "inputs"')
     problem = payload["problem"]
+    deadline = payload.get("deadline_s")
     return SolveRequest(
         problem=problem,
         inputs=decode_inputs(payload["inputs"]),
         cfg=decode_config(problem, payload.get("cfg")),
         options=decode_options(payload.get("options")),
-        chaos_spec=payload.get("chaos"))
+        chaos_spec=payload.get("chaos"),
+        deadline_s=float(deadline) if deadline is not None else None)
 
 
 def _tree_to_lists(x):
@@ -120,10 +80,15 @@ def encode_result(rec: RequestRecord, include_x: bool = False) -> dict:
         out["converged_at"] = sol.log.converged_at
         out["iters_run"] = sol.log.iters_run
         out["time_percentiles_s"] = sol.percentiles()
-        if sol.recovery is not None:
-            out["recovery"] = sol.recovery.to_json()
         if include_x:
             out["x"] = _tree_to_lists(sol.x)
+    # prefer the per-request ledger (§21: sliced from the bucket's
+    # shared report, or attached by the quarantine solo re-run) over
+    # the raw Solution report
+    rep = rec.recovery if rec.recovery is not None else \
+        (sol.recovery if sol is not None else None)
+    if rep is not None:
+        out["recovery"] = rep.to_json()
     return out
 
 
@@ -214,13 +179,20 @@ class _Handler(BaseHTTPRequestHandler):
         parts, q = self._split()
         try:
             if parts == ["v1", "metrics"]:
-                return self._json(200, self.runner.service.metrics
-                                  .snapshot())
+                svc = self.runner.service
+                snap = svc.metrics.snapshot()
+                snap["breakers"] = svc.breaker_states()
+                return self._json(200, snap)
             if parts == ["v1", "healthz"]:
                 svc = self.runner.service
                 return self._json(200, {
-                    "ok": True, "draining": svc.draining,
+                    "ok": not svc.crashed, "draining": svc.draining,
+                    "crashed": svc.crashed,
                     "queue_depth": svc.metrics.queue_depth})
+            if parts == ["v1", "readyz"]:
+                ok, detail = self.runner.service.ready()
+                return self._json(200 if ok else 503,
+                                  {"ready": ok, **detail})
             if len(parts) == 3 and parts[:2] == ["v1", "requests"]:
                 rec = self.runner.record(parts[2])
                 return self._json(200, rec.public())

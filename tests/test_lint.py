@@ -858,6 +858,64 @@ def test_rpl801_unregistered_class_not_flagged(tmp_path):
 
 
 # =====================================================================
+# RPL901 untracked-task
+# =====================================================================
+
+def test_rpl901_bare_create_task(tmp_path):
+    found = _lint(tmp_path, """
+        import asyncio
+
+        async def start(self):
+            asyncio.create_task(self._watchdog())
+    """, name="repro/serve/svc.py")
+    hits = _only(found, "RPL901")
+    assert len(hits) == 1
+    assert "discards the task handle" in hits[0].message
+
+
+def test_rpl901_assigned_never_used(tmp_path):
+    found = _lint(tmp_path, """
+        import asyncio
+
+        async def start(self):
+            t = asyncio.ensure_future(self._watchdog())
+            return self
+    """, name="repro/serve/svc.py")
+    hits = _only(found, "RPL901")
+    assert len(hits) == 1
+    assert "'t'" in hits[0].message
+
+
+def test_rpl901_tracked_handles_clean(tmp_path):
+    found = _lint(tmp_path, """
+        import asyncio
+
+        async def start(self):
+            # stored on the object: cancellable and inspectable
+            self._watchdog_task = asyncio.create_task(self._watchdog())
+            self._watchdog_task.add_done_callback(self._task_exc)
+
+        async def probe(self, coros):
+            # awaited and gathered handles retrieve their exceptions
+            t = asyncio.create_task(coros[0])
+            await t
+            rest = [asyncio.ensure_future(c) for c in coros[1:]]
+            return await asyncio.gather(*rest)
+    """, name="repro/serve/svc.py")
+    assert _only(found, "RPL901") == []
+
+
+def test_rpl901_out_of_scope_clean(tmp_path):
+    found = _lint(tmp_path, """
+        import asyncio
+
+        async def fire_and_forget(coro):
+            asyncio.create_task(coro)
+    """, name="repro/core/loop.py")
+    assert _only(found, "RPL901") == []
+
+
+# =====================================================================
 # Registry / CLI / output contracts
 # =====================================================================
 
@@ -878,6 +936,7 @@ def test_rule_ids_stable():
         "RPL601": "noncanonical-import",
         "RPL701": "swallowed-exception",
         "RPL801": "batch-axes",
+        "RPL901": "untracked-task",
     }
 
 

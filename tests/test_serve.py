@@ -256,6 +256,234 @@ def test_batch_failure_marks_all_failed(instances):
 
 
 # =====================================================================
+# §21 serving resilience: quarantine, deadlines, cancel/drain in
+# flight, breaker shedding, watchdog, journal replay
+# =====================================================================
+
+def test_quarantine_isolates_poisoned_lane(instances):
+    """A ``serve_bucket_poison`` fault NaNs one lane of a coalesced
+    bucket; the bucket fails as a unit and quarantine re-dispatches
+    every lane solo: only the poisoned request fails (with a
+    per-request recovery report), the sibling reproduces its direct
+    trajectory."""
+    from repro.resilience.recovery import ResilienceConfig
+    res = ResilienceConfig(max_rollbacks=2, backoff_s=0.001, ring=2)
+
+    async def run():
+        cfg = ServeConfig(batch_window_s=0.3, max_batch=8,
+                          chaos_spec="serve_bucket_poison@0;seed=7")
+        async with AsyncSolveService(cfg) as svc:
+            opts = dict(OPTIONS)
+            opts["resilience"] = res
+            a = await svc.submit(_req(instances[0],
+                                      options=dict(opts)))
+            b = await svc.submit(_req(instances[1],
+                                      options=dict(opts)))
+            got = [await svc.result(r.id, timeout=300) for r in (a, b)]
+            assert svc.metrics.counter("quarantined") == 1
+            return got
+
+    out = asyncio.run(run())
+    assert {r.bucket_key for r in out} == {out[0].bucket_key}
+    assert out[0].batch_size == 2        # they really coalesced
+    failed = [r for r in out if r.status == "failed"]
+    assert len(failed) == 1
+    assert failed[0].quarantined
+    assert failed[0].recovery is not None
+    assert failed[0].recovery.rollbacks >= 1
+    # the per-request report also rides the event stream
+    kinds = [e.get("kind") for e in failed[0].events]
+    assert "recovery" in kinds
+    sibling = next(r for r in out if r.status == "done")
+    assert sibling.quarantined
+    idx = out.index(sibling)
+    _assert_parity(sibling, _direct(instances[idx]))
+
+
+def test_deadline_expires_at_chunk_boundary(instances):
+    """A running request past its ``deadline_s`` is frozen at the next
+    chunk boundary — it fails with the deadline error without running
+    its full iteration budget."""
+
+    async def run():
+        async with AsyncSolveService(ServeConfig(
+                batch_window_s=0.05, max_batch=8)) as svc:
+            opts = dict(OPTIONS)
+            opts["max_iter"] = 600
+            rec = await svc.submit(_req(instances[0], options=opts,
+                                        deadline_s=0.5))
+            got = await svc.result(rec.id, timeout=300)
+            assert svc.metrics.counter("expired") == 1
+            return got
+
+    got = asyncio.run(run())
+    assert got.status == "failed"
+    assert "deadline" in got.error
+    chunks = [e for e in got.events if e.get("kind") == "chunk"]
+    assert max((e["done"] for e in chunks), default=0) < 600
+
+
+def test_cancel_while_dispatched_freezes_lane(instances):
+    """Cancelling a request already in a running coalesced batch
+    freezes its lane at the next chunk boundary; the sibling's
+    trajectory is untouched."""
+
+    async def run():
+        cfg = ServeConfig(batch_window_s=0.2, max_batch=8)
+        async with AsyncSolveService(cfg) as svc:
+            opts = dict(OPTIONS)
+            opts["max_iter"] = 400
+            a = await svc.submit(_req(instances[0], options=dict(opts)))
+            b = await svc.submit(_req(instances[1], options=dict(opts)))
+            # wait for the first progress event: the batch is running
+            events, done, _ = await svc.wait_events(a.id, 0,
+                                                    timeout=120)
+            assert events and not done
+            assert await svc.cancel(a.id)          # running -> flagged
+            assert not await svc.cancel(a.id)      # only flags once
+            got_a = await svc.result(a.id, timeout=300)
+            got_b = await svc.result(b.id, timeout=300)
+            assert svc.metrics.counter("cancelled") == 1
+            return got_a, got_b
+
+    got_a, got_b = asyncio.run(run())
+    assert got_a.status == "cancelled"
+    assert "chunk boundary" in got_a.error
+    # the lane's own log records the freeze point (batched progress
+    # events carry the *global* bucket iteration, not the lane's)
+    assert got_a.solution is not None
+    assert got_a.solution.log.cancelled_at is not None
+    _assert_parity(got_b, _direct(instances[1], max_iter=400))
+
+
+def test_drain_while_dispatched(instances):
+    """Draining while a coalesced batch is in flight lets it finish:
+    both members come back ``done`` with clean trajectories."""
+
+    async def run():
+        cfg = ServeConfig(batch_window_s=0.1, max_batch=8)
+        async with AsyncSolveService(cfg) as svc:
+            a = await svc.submit(_req(instances[0]))
+            b = await svc.submit(_req(instances[1]))
+            # in flight once progress starts streaming
+            events, done, _ = await svc.wait_events(a.id, 0,
+                                                    timeout=120)
+            assert events or done
+            await svc.drain()
+            return (await svc.result(a.id, timeout=300),
+                    await svc.result(b.id, timeout=300))
+
+    got_a, got_b = asyncio.run(run())
+    _assert_parity(got_a, _direct(instances[0]))
+    _assert_parity(got_b, _direct(instances[1]))
+
+
+def test_breaker_trips_sheds_and_recovers(instances):
+    """Repeated dispatch failures trip the workload's circuit breaker:
+    further submits shed with the retriable rejection; after the
+    cooldown a half-open probe that succeeds closes it again."""
+
+    async def run():
+        cfg = ServeConfig(batch_window_s=0.0, max_batch=1,
+                          breaker_min_samples=2, breaker_window=4,
+                          breaker_error_threshold=0.5,
+                          breaker_cooldown_s=0.3)
+        async with AsyncSolveService(cfg) as svc:
+            for _ in range(2):           # unsupervised injected faults
+                rec = await svc.submit(_req(instances[0],
+                                            chaos_spec="dispatch@0"))
+                got = await svc.result(rec.id, timeout=300)
+                assert got.status == "failed"
+            assert svc.breaker_states()["deconvolve"]["state"] == "open"
+            ok, detail = svc.ready()
+            assert not ok and detail["open_breakers"] == ["deconvolve"]
+            with pytest.raises(RequestRejected) as ei:
+                await svc.submit(_req(instances[0]))
+            assert ei.value.retriable
+            assert svc.metrics.counter("shed") == 1
+            await asyncio.sleep(0.35)    # cooldown -> half-open probe
+            rec = await svc.submit(_req(instances[0]))
+            got = await svc.result(rec.id, timeout=300)
+            assert got.status == "done"
+            assert svc.breaker_states()["deconvolve"]["state"] \
+                == "closed"
+            assert svc.ready()[0]
+
+    asyncio.run(run())
+
+
+def test_watchdog_reaps_hung_dispatch(instances):
+    """A dispatch with no completion after ``dispatch_timeout_s`` is
+    reaped: the request fails with the hung-dispatch error and the
+    worker's lane is frozen at its next chunk boundary."""
+
+    async def run():
+        cfg = ServeConfig(batch_window_s=0.0, max_batch=1,
+                          dispatch_timeout_s=0.4)
+        async with AsyncSolveService(cfg) as svc:
+            opts = dict(OPTIONS)
+            opts["max_iter"] = 4000      # far longer than the timeout
+            rec = await svc.submit(_req(instances[0], options=opts))
+            got = await svc.result(rec.id, timeout=300)
+            assert svc.metrics.counter("hung") == 1
+            return got
+
+    got = asyncio.run(run())
+    assert got.status == "failed"
+    assert "hung dispatch" in got.error
+
+
+def test_journal_replay_recovers_dropped_request(instances):
+    """The crash-between-journal-and-schedule drill: an admitted
+    request the scheduler never saw (``serve_admit_drop``) survives a
+    hard crash via the journal and completes on the restarted
+    service."""
+    import tempfile
+    journal_dir = tempfile.mkdtemp(prefix="serve-journal-")
+    ref = _direct(instances[0])
+
+    async def phase1():
+        cfg = ServeConfig(batch_window_s=0.05, max_batch=8,
+                          journal_dir=journal_dir,
+                          chaos_spec="serve_admit_drop@0")
+        svc = AsyncSolveService(cfg)
+        await svc.start()
+        rec = await svc.submit(_req(instances[0]))
+        assert rec.status == "queued"    # journaled, never scheduled
+        await svc.abandon()
+        return rec.id
+
+    rid = asyncio.run(phase1())
+
+    async def phase2():
+        cfg = ServeConfig(batch_window_s=0.05, max_batch=8,
+                          journal_dir=journal_dir)
+        async with AsyncSolveService(cfg) as svc:
+            got = await svc.result(rid, timeout=300)
+            assert svc.metrics.counter("replayed") == 1
+            return got
+
+    got = asyncio.run(phase2())
+    assert got.replayed
+    _assert_parity(got, ref)
+
+
+def test_wal_skips_torn_tail(tmp_path):
+    """The WAL reader's contract: a torn/corrupt tail line is skipped,
+    everything before it is intact."""
+    from repro.checkpoint.wal import WriteAheadLog
+    path = tmp_path / "j.wal"
+    with WriteAheadLog(path) as wal:
+        wal.append({"kind": "admit", "id": "a"})
+        wal.append({"kind": "done", "id": "a", "status": "done"})
+    with open(path, "ab") as f:
+        f.write(b"deadbeef {torn")      # crash mid-append
+    records, skipped = WriteAheadLog.read(path)
+    assert [r["kind"] for r in records] == ["admit", "done"]
+    assert skipped == 1
+
+
+# =====================================================================
 # HTTP transport round-trip
 # =====================================================================
 
